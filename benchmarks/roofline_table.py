@@ -1,0 +1,35 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads artifacts/dryrun/*.json (produced by repro.launch.dryrun) and prints
+one row per (arch x shape x mesh): the three roofline terms, dominant
+bottleneck, useful-flops ratio, and per-device peak memory.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def main(pattern: str = "artifacts/dryrun/*.json") -> None:
+    files = sorted(glob.glob(pattern))
+    if not files:
+        emit("roofline_table", 0.0, "no_artifacts;run=python -m repro.launch.dryrun")
+        return
+    for f in files:
+        r = json.load(open(f))
+        tag = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r.get("status") != "ok":
+            emit(tag, 0.0, f"status=FAIL;{r.get('error', '')[:100]}")
+            continue
+        peak = r["memory_per_device"]["peak_estimate_bytes"] / 2**30
+        emit(tag, r.get("compile_s", 0.0) * 1e6,
+             f"compute_s={r['compute_s']:.3e};memory_s={r['memory_s']:.3e};"
+             f"collective_s={r['collective_s']:.3e};dom={r['dominant']};"
+             f"useful_ratio={r['useful_ratio']:.2f};peak_GiB={peak:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # CPU-only artifact suppression: XLA:CPU converts bf16 dot operands to
+    # f32 and LICM hoists whole-cache converts out of the layer scan, which
+    # would falsely dominate the memory analysis (a TPU bf16 MXU dot has no
+    # such convert).  Keeping the convert inside the loop makes
+    # memory_analysis faithful to the TPU target.
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion"
+)
+
+"""Diagnostic: compile one dry-run cell and dump the largest HLO buffers."""
+import argparse
+import collections
+import re
+
+import jax
+
+from repro import configs
+from repro.dist.cells import make_cell
+from repro.launch.mesh import make_production_mesh
+
+DT = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "pred": 1, "s8": 1, "u8": 1,
+      "f16": 2, "s64": 8, "u64": 8}
+PAT = re.compile(r"=\s+(f32|bf16|s32|u32|pred|s8|u8|f16|s64|u64)\[([0-9,]+)\]\S*\s+([\w-]+)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--min-gib", type=float, default=0.25)
+    args = ap.parse_args()
+
+    cfg = configs.get_arch(args.arch)
+    shape = configs.SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi)
+    cell = make_cell(cfg, shape, mesh)
+    with mesh:
+        compiled = jax.jit(
+            cell.fn, in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums).lower(*cell.args).compile()
+    hlo = compiled.as_text()
+    agg = collections.Counter()
+    example = {}
+    for line in hlo.splitlines():
+        m = PAT.search(line)
+        if not m:
+            continue
+        dt, dims, op = m.groups()
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        sz = n * DT[dt]
+        if sz >= args.min_gib * 2**30:
+            key = f"{dt}[{dims}]"
+            agg[key] += 1
+            example.setdefault(key, (op, line.strip()[:150]))
+
+    def keysize(key):
+        dtn, dims = key.split("[")
+        n = 1
+        for d in dims.rstrip("]").split(","):
+            n *= int(d)
+        return n * DT[dtn]
+
+    for key in sorted(agg, key=keysize, reverse=True)[: args.top]:
+        op, line = example[key]
+        print(f"{keysize(key)/2**30:8.2f} GiB x{agg[key]:3d}  {key}  {op} | {line[:110]}")
+    ma = compiled.memory_analysis()
+    print(f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB arg={ma.argument_size_in_bytes/2**30:.2f} "
+          f"out={ma.output_size_in_bytes/2**30:.2f} alias={ma.alias_size_in_bytes/2**30:.2f}")
+
+
+if __name__ == "__main__":
+    main()

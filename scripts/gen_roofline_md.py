@@ -1,0 +1,36 @@
+"""Generate the EXPERIMENTS.md roofline table from artifacts/dryrun."""
+import glob
+import json
+import sys
+
+
+def fmt(v):
+    return f"{v:.2e}" if v < 0.01 or v > 1000 else f"{v:.3f}"
+
+
+def main(pattern="artifacts/dryrun/*pod16x16.json"):
+    rows = []
+    for f in sorted(glob.glob(pattern)):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            rows.append((r["arch"], r["shape"], "FAIL", r.get("error", "")[:60]))
+            continue
+        dom_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        mfu_bound = r["model_flops"] / (dom_s * 197e12) if dom_s else 0
+        rows.append((
+            r["arch"], r["shape"],
+            fmt(r["compute_s"]), fmt(r["memory_s"]), fmt(r["collective_s"]),
+            r["dominant"], f"{r['useful_ratio']:.2f}",
+            f"{mfu_bound*100:.1f}%",
+            f"{r['memory_per_device']['peak_estimate_bytes']/2**30:.1f}",
+        ))
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| useful | roofline-MFU | peak GiB |")
+    print(hdr)
+    print("|" + "---|" * 9)
+    for row in rows:
+        print("| " + " | ".join(str(c) for c in row) + " |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

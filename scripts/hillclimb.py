@@ -1,0 +1,114 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion"
+)
+
+"""Perf-iteration harness: run one dry-run cell with config overrides and
+print the roofline delta vs the baseline artifact.
+
+    PYTHONPATH=src python scripts/hillclimb.py --arch gemma3-27b \
+        --shape prefill_32k --set attn_impl=packed --tag packed_attn
+"""
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro import configs
+from repro import roofline as RL
+from repro.dist import cells as C
+from repro.launch.dryrun import extrapolated_costs
+from repro.launch.mesh import make_production_mesh
+
+
+def parse_val(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="cfg overrides key=value (dataclasses.replace)")
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--tag", default="variant")
+    ap.add_argument("--out", default="artifacts/perf")
+    args = ap.parse_args()
+
+    cfg = configs.get_arch(args.arch)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_val(v)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    if args.microbatch is not None:
+        C.TRAIN_MICROBATCH[cfg.name] = args.microbatch
+    shape = configs.SHAPES[args.shape]
+    mesh = make_production_mesh()
+    cell = C.make_cell(cfg, shape, mesh)
+
+    t0 = time.time()
+    with mesh:
+        compiled = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                           out_shardings=cell.out_shardings,
+                           donate_argnums=cell.donate_argnums
+                           ).lower(*cell.args).compile()
+    mem = compiled.memory_analysis()
+    mem_stats = {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "peak_estimate_bytes": (mem.argument_size_in_bytes
+                                + mem.output_size_in_bytes
+                                + mem.temp_size_in_bytes
+                                - mem.alias_size_in_bytes),
+    }
+    flops, byts, coll = extrapolated_costs(cfg, shape, mesh)
+    roof = RL.analyze(args.arch, args.shape, "pod16x16", mesh.devices.size,
+                      flops, byts, coll, RL.model_flops(cfg, shape),
+                      mem_stats, note=args.tag)
+    rec = dataclasses.asdict(roof)
+    rec["overrides"] = overrides
+    rec["wall_s"] = round(time.time() - t0, 1)
+
+    base_path = Path("artifacts/dryrun") / \
+        f"{args.arch}_{args.shape}_pod16x16.json"
+    if base_path.exists():
+        base = json.loads(base_path.read_text())
+        if base.get("status") == "ok":
+            for term in ("compute_s", "memory_s", "collective_s"):
+                b, n = base[term], rec[term]
+                rec[f"delta_{term}"] = f"{(n - b) / max(b, 1e-30) * 100:+.1f}%"
+            rec["baseline"] = {k: base[k] for k in
+                               ("compute_s", "memory_s", "collective_s",
+                                "dominant", "useful_ratio")}
+            rec["baseline"]["peak_GiB"] = \
+                base["memory_per_device"]["peak_estimate_bytes"] / 2**30
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out = out_dir / f"{args.arch}_{args.shape}_{args.tag}.json"
+    out.write_text(json.dumps(rec, indent=1))
+    print(json.dumps({k: rec[k] for k in
+                      ("compute_s", "memory_s", "collective_s", "dominant",
+                       "useful_ratio") if k in rec}, indent=1))
+    for k in ("delta_compute_s", "delta_memory_s", "delta_collective_s"):
+        if k in rec:
+            print(f"{k}: {rec[k]}")
+    print(f"peak_GiB: {mem_stats['peak_estimate_bytes']/2**30:.2f}")
+    print(f"written: {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Config registry: importing this package registers all assigned archs."""
+from repro.configs.base import (
+    ArchConfig,
+    ShapeSpec,
+    SHAPES,
+    all_archs,
+    cells,
+    get_arch,
+    register,
+    shape_applicable,
+)
+
+# Importing registers each architecture.
+from repro.configs.phi35_moe import PHI35_MOE
+from repro.configs.olmoe import OLMOE
+from repro.configs.gemma3_27b import GEMMA3_27B
+from repro.configs.glm4_9b import GLM4_9B
+from repro.configs.nemotron4_15b import NEMOTRON4_15B
+from repro.configs.qwen15_4b import QWEN15_4B
+from repro.configs.chameleon_34b import CHAMELEON_34B
+from repro.configs.rwkv6_1b6 import RWKV6_1B6
+from repro.configs.musicgen_large import MUSICGEN_LARGE
+from repro.configs.recurrentgemma_2b import RECURRENTGEMMA_2B
+
+from repro.configs import paper
+
+ASSIGNED = [
+    "phi3.5-moe-42b-a6.6b",
+    "olmoe-1b-7b",
+    "gemma3-27b",
+    "glm4-9b",
+    "nemotron-4-15b",
+    "qwen1.5-4b",
+    "chameleon-34b",
+    "rwkv6-1.6b",
+    "musicgen-large",
+    "recurrentgemma-2b",
+]
+
+__all__ = [
+    "ArchConfig", "ShapeSpec", "SHAPES", "all_archs", "cells", "get_arch",
+    "register", "shape_applicable", "paper", "ASSIGNED",
+]

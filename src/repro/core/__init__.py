@@ -1,0 +1,2 @@
+from repro.core import (dvfs, energy, hybrid, nef, noc, packets, pe,
+                        quant, router, snn)

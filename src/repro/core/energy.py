@@ -1,0 +1,86 @@
+"""Energy models.
+
+1. ``PEEnergyModel`` — Eq. (1) of the paper with the measured Table I
+   parameters: per-tick PE energy as baseline power at the active PL during
+   the busy window t_sp, baseline power at PL1 for the idle remainder, plus
+   per-neuron-update and per-synaptic-event energies.
+
+2. ``TPUEnergyModel`` — the same "energy follows activity" principle lifted
+   to the framework level: a compiled step's energy is estimated from its
+   roofline terms (FLOPs / HBM bytes / ICI bytes) plus idle power for the
+   un-overlapped remainder.  This is what every dry-run cell reports.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import paper
+
+
+@dataclass(frozen=True)
+class PEEnergyModel:
+    pls: tuple = paper.PERF_LEVELS
+    t_sys_s: float = 1e-3
+    cycles_per_neuron: int = paper.CYCLES_PER_NEURON_UPDATE
+    cycles_per_syn: int = paper.CYCLES_PER_SYN_EVENT
+    cycles_overhead: int = paper.CYCLES_TICK_OVERHEAD
+
+    def t_sp(self, pl_idx, n_neur, n_syn_events):
+        """Busy time within a tick at PL pl_idx (vectorized, seconds)."""
+        freqs = jnp.asarray([p.freq_hz for p in self.pls])
+        cycles = (self.cycles_overhead
+                  + self.cycles_per_neuron * n_neur
+                  + self.cycles_per_syn * n_syn_events)
+        t = cycles / freqs[pl_idx]
+        return jnp.minimum(t, self.t_sys_s)
+
+    def tick_energy(self, pl_idx, n_neur, n_syn_events, *, dvfs=True):
+        """Eq. (1).  Returns dict of energy components [J] (vectorized).
+
+        dvfs=False models "only PL3": the PE never returns to PL1 while
+        idle, so baseline power is P_BL,3 for the whole tick.
+        """
+        p_bl = jnp.asarray([p.p_baseline_w for p in self.pls])
+        e_neur = jnp.asarray([p.e_neuron_j for p in self.pls])
+        e_syn = jnp.asarray([p.e_synapse_j for p in self.pls])
+        tsp = self.t_sp(pl_idx, n_neur, n_syn_events)
+        if dvfs:
+            base = p_bl[pl_idx] * tsp + p_bl[0] * (self.t_sys_s - tsp)
+        else:
+            base = p_bl[pl_idx] * self.t_sys_s
+        return {
+            "baseline": base,
+            "neuron": e_neur[pl_idx] * n_neur,
+            "synapse": e_syn[pl_idx] * n_syn_events,
+            "t_sp": tsp,
+        }
+
+
+@dataclass(frozen=True)
+class TPUEnergyModel:
+    chip: paper.ChipSpec = paper.TPU_V5E
+
+    def step_energy(self, *, flops, hbm_bytes, ici_bytes, step_time_s,
+                    n_chips=1):
+        """Per-step energy estimate [J] from roofline terms.
+
+        step_time_s: the max of the three roofline terms (or a measured
+        time); idle power covers the un-overlapped remainder — the direct
+        analogue of Eq. (1)'s P_BL * (t_sys - t_sp).
+        """
+        c = self.chip
+        dyn = (flops * c.pj_per_flop_bf16
+               + hbm_bytes * c.pj_per_hbm_byte
+               + ici_bytes * c.pj_per_ici_byte) * 1e-12
+        idle = c.idle_power_w * step_time_s
+        return {
+            "dynamic": dyn * n_chips if np.ndim(dyn) == 0 else dyn,
+            "idle": idle * n_chips,
+            "total": (dyn + idle) * n_chips,
+        }
+
+    def tokens_per_joule(self, tokens, energy_j):
+        return tokens / max(energy_j, 1e-12)

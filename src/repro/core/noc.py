@@ -1,0 +1,91 @@
+"""NoC model (paper Sec. III-A): 2D-mesh X/Y-first routing, QPE tiles,
+DNoC/CNoC packet cost accounting.
+
+Used for (a) spike-traffic energy/latency accounting in the SNN engine and
+(b) cross-checking the dry-run's ICI collective model: a mesh collective is
+priced as the sum of link traversals its packets make under X/Y routing —
+the same arithmetic the SpiNNaker2 DNoC performs per 192-bit flit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.configs import paper
+
+
+@dataclass(frozen=True)
+class NocSpec:
+    flit_bits: int = paper.DNOC_FLIT_BITS
+    hop_cycles: int = paper.NOC_HOP_CYCLES
+    freq_hz: float = paper.NOC_FREQ_HZ
+    payload_bits: int = paper.NOC_PAYLOAD_BITS_MAX
+    pj_per_bit_hop: float = 0.08          # planning constant, 22FDSOI-class
+
+
+def xy_route(src: tuple, dst: tuple):
+    """X-first then Y. Returns list of hops ((x,y) -> (x,y))."""
+    (x0, y0), (x1, y1) = src, dst
+    path = []
+    x, y = x0, y0
+    while x != x1:
+        nx = x + (1 if x1 > x else -1)
+        path.append(((x, y), (nx, y)))
+        x = nx
+    while y != y1:
+        ny = y + (1 if y1 > y else -1)
+        path.append(((x, y), (x, ny)))
+        y = ny
+    return path
+
+
+def hops(src: tuple, dst: tuple) -> int:
+    return abs(src[0] - dst[0]) + abs(src[1] - dst[1])
+
+
+def multicast_links(src: tuple, dsts) -> int:
+    """Number of distinct links traversed by an X/Y multicast tree — the
+    router duplicates packets at branch points (Sec. III-B), so shared
+    prefixes are paid once."""
+    links = set()
+    for d in dsts:
+        links.update(xy_route(src, d))
+    return len(links)
+
+
+@dataclass(frozen=True)
+class NocModel:
+    spec: NocSpec = NocSpec()
+
+    def packet_latency_s(self, src, dst) -> float:
+        return hops(src, dst) * self.spec.hop_cycles / self.spec.freq_hz
+
+    def spike_energy_j(self, src, dsts) -> float:
+        """One multicast spike packet (header-only, 64b effective)."""
+        nlinks = multicast_links(src, dsts)
+        return nlinks * 64 * self.spec.pj_per_bit_hop * 1e-12
+
+    def payload_energy_j(self, src, dsts, payload_bits) -> float:
+        nflits = -(-payload_bits // self.spec.payload_bits)
+        nlinks = multicast_links(src, dsts)
+        return nlinks * nflits * self.spec.flit_bits \
+            * self.spec.pj_per_bit_hop * 1e-12
+
+    def collective_link_bytes(self, kind: str, nbytes: int, n: int) -> float:
+        """Per-device link bytes of a ring collective over n devices — used
+        to cross-check the HLO collective parser against a first-principles
+        NoC count."""
+        if n <= 1:
+            return 0.0
+        if kind == "all-gather":
+            return nbytes * (n - 1) / n
+        if kind == "reduce-scatter":
+            return nbytes * (n - 1) / n
+        if kind == "all-reduce":
+            return 2.0 * nbytes * (n - 1) / n
+        if kind == "all-to-all":
+            return nbytes * (n - 1) / n
+        if kind == "collective-permute":
+            return float(nbytes)
+        raise ValueError(kind)

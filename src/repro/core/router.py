@@ -1,0 +1,92 @@
+"""SpiNNaker2 multicast packet router (paper Sec. III-B), JAX-native.
+
+Routing is key-based: each spike carries a key (its source population id);
+routing tables map keys to destination PEs.  Three realizations:
+
+* ``delivery_matrix`` — dense (n_sources, n_pes) 0/1 matrix; delivery is a
+  matmul (the event-driven MAC view of routing).  Used by the SNN engine.
+* ``ring_exchange``   — the synfire topology (PE i -> PE i+1) as a
+  jnp.roll on one device or a shard_map collective_permute over a "pe"
+  mesh axis — the NoC hop becomes an ICI hop.
+* ``multicast_exchange`` — general key->multi-PE delivery via shard_map
+  psum of masked contributions (each source broadcasts on the mesh like a
+  DNoC multicast flit; receivers mask by routing table).
+
+The MoE dispatch in ``repro.models.moe.moe_apply_sharded`` is the
+rate-based twin of this module (spikes-with-payload = routed tokens).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class RoutingTable:
+    """keys[i] -> boolean destination mask over PEs."""
+    masks: np.ndarray          # (n_keys, n_pes) bool
+
+    @staticmethod
+    def ring(n_pes: int) -> "RoutingTable":
+        m = np.zeros((n_pes, n_pes), bool)
+        for i in range(n_pes):
+            m[i, (i + 1) % n_pes] = True
+        return RoutingTable(m)
+
+    @staticmethod
+    def self_loop(n_pes: int) -> "RoutingTable":
+        return RoutingTable(np.eye(n_pes, dtype=bool))
+
+    def delivery_matrix(self) -> jnp.ndarray:
+        return jnp.asarray(self.masks, jnp.int32)
+
+    def fan_out(self) -> np.ndarray:
+        return self.masks.sum(axis=1)
+
+
+def ring_exchange(spikes, mesh=None, axis="pe"):
+    """spikes: (n_pes, ...) -> delivered to PE i+1 (synfire ring).
+
+    With a mesh containing `axis`, PEs are sharded and the roll lowers to a
+    collective_permute over ICI; otherwise a local jnp.roll.
+    """
+    if mesh is None or axis not in getattr(mesh, "shape", {}):
+        return jnp.roll(spikes, 1, axis=0)
+
+    n = mesh.shape[axis]
+
+    def local(s):
+        perm = [(i, (i + 1) % n) for i in range(n)]
+        return jax.lax.ppermute(s, axis, perm)
+
+    return jax.shard_map(local, mesh=mesh, in_specs=P(axis),
+                         out_specs=P(axis), check_vma=False)(spikes)
+
+
+def multicast_exchange(spikes, table: RoutingTable, mesh=None, axis="pe"):
+    """spikes: (n_pes, n_keys_per_pe) counts emitted by each PE.
+
+    Returns (n_pes, n_src_total) arrival counts at each PE, where source j
+    of PE i is delivered to every PE in the table mask for key (i, j).
+    Dense formulation: arrivals[p] = sum_i spikes[i] * mask[i -> p].
+    """
+    n_pes, n_keys = spikes.shape
+    dm = table.delivery_matrix()                    # (n_pes, n_pes) here
+
+    if mesh is None or axis not in getattr(mesh, "shape", {}):
+        # arrivals[p, i, k] = spikes[i, k] * dm[i, p]
+        return jnp.einsum("ik,ip->pik", spikes, dm)
+
+    def local(s_local, dm_full):
+        # each PE broadcasts its spikes (DNoC multicast); receivers mask
+        gathered = jax.lax.all_gather(s_local, axis, tiled=True)  # (n_pes, k)
+        p = jax.lax.axis_index(axis)
+        return (gathered * dm_full[:, p][:, None])[None]
+
+    return jax.shard_map(local, mesh=mesh,
+                         in_specs=(P(axis), P()),
+                         out_specs=P(axis), check_vma=False)(spikes, dm)

@@ -1,0 +1,178 @@
+"""Event-driven SNN engine + the synfire-chain benchmark (paper Sec. VI-B).
+
+Faithful to the paper's processing model: each PE simulates its neurons
+once per 1 ms timer tick; inbound spikes sit in a FIFO until the next tick;
+the FIFO occupancy picks the performance level (core/dvfs.py) BEFORE
+processing; after the busy window t_sp the PE returns to PL1 and sleeps.
+
+Arithmetic is SpiNNaker-style s16.15 fixed point: the LIF update uses
+exactly the kernel math (kernels/lif/ref.py — bit-identical to the Pallas
+kernel), the membrane decay constant comes from the exp accelerator
+(kernels/explog), and synaptic-event accumulation is an integer matmul —
+the event-driven MAC-array mode of Sec. II.
+
+The synfire chain (Fig. 16, Table II): 8 PEs in a ring; per PE one
+excitatory population (200) and one inhibitory population (50); exc of PE i
+projects to exc+inh of PE i+1 with 10 ms delay (fan-in 60); inh projects to
+exc of the same PE with 8 ms delay (fan-in 25); normally distributed noise
+current; a stimulus pulse packet kick-starts PE 0.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import paper
+from repro.core.dvfs import DVFSController
+from repro.core.energy import PEEnergyModel
+from repro.core.router import RoutingTable, ring_exchange
+from repro.kernels.explog.ops import to_fx
+from repro.kernels.lif.ops import lif_params_fx
+from repro.kernels.lif.ref import lif_step_ref
+
+FX_ONE = 1 << 15
+
+
+@dataclass
+class SynfireNet:
+    params: paper.SynfireParams
+    w_ff: jnp.ndarray        # (P, 200, 250) int32 s16.15: prev-exc -> [exc|inh]
+    w_inh: jnp.ndarray       # (P, 50, 200) int32 s16.15 (negative)
+    deg_ff: jnp.ndarray      # (P, 200) int32: out-degree of each prev-exc source
+    deg_inh: jnp.ndarray     # (P, 50) int32
+    lif: dict
+    noise_sigma_fx: int
+    stim_ticks: int
+    stim_current_fx: int
+
+
+def build_synfire(seed: int = 0, *, w_exc: float = 0.075, w_inh: float = -0.30,
+                  noise_sigma: float = 0.30, tau_ms: float = 10.0,
+                  v_th: float = 1.0, ref_ticks: int = 2,
+                  sp: paper.SynfireParams = paper.SYNFIRE) -> SynfireNet:
+    rng = np.random.default_rng(seed)
+    P_, NE, NI = sp.n_pes, sp.n_exc, sp.n_inh
+    N = sp.neurons_per_core
+    w_ff = np.zeros((P_, NE, N), np.float32)
+    w_inh_m = np.zeros((P_, NI, NE), np.float32)
+    for p in range(P_):
+        # each target neuron draws fan_in_exc sources from prev layer's exc
+        for tgt in range(N):
+            src = rng.choice(NE, sp.fan_in_exc, replace=False)
+            w_ff[p, src, tgt] = w_exc
+        for tgt in range(NE):
+            src = rng.choice(NI, sp.fan_in_inh, replace=False)
+            w_inh_m[p, src, tgt] = w_inh
+    lif = lif_params_fx(tau_ms=tau_ms, v_th=v_th, v_reset=0.0,
+                        ref_ticks=ref_ticks)
+    return SynfireNet(
+        params=sp,
+        w_ff=jnp.asarray(np.round(w_ff * FX_ONE), jnp.int32),
+        w_inh=jnp.asarray(np.round(w_inh_m * FX_ONE), jnp.int32),
+        deg_ff=jnp.asarray((w_ff != 0).sum(axis=2), jnp.int32),
+        deg_inh=jnp.asarray((w_inh_m != 0).sum(axis=2), jnp.int32),
+        lif=lif,
+        noise_sigma_fx=int(round(noise_sigma * FX_ONE)),
+        stim_ticks=2,
+        stim_current_fx=int(round(2.0 * FX_ONE)),
+    )
+
+
+def simulate_synfire(net: SynfireNet, n_ticks: int, seed: int = 1):
+    """Returns per-tick records (all (T, P) unless noted):
+
+    pl, n_fifo, syn_events, spikes_exc (T,P,200), spikes_inh (T,P,50),
+    plus both energy accountings (dvfs / only-PL3).
+    """
+    sp = net.params
+    P_, NE, NI = sp.n_pes, sp.n_exc, sp.n_inh
+    N = sp.neurons_per_core
+    d_exc = int(sp.delay_exc_ms)
+    d_inh = int(sp.delay_inh_ms)
+    dvfs = DVFSController(sp.l_th1, sp.l_th2)
+    em = PEEnergyModel()
+    key = jax.random.PRNGKey(seed)
+
+    state0 = {
+        "v": jnp.zeros((P_, N), jnp.int32),
+        "ref": jnp.zeros((P_, N), jnp.int32),
+        "exc_buf": jnp.zeros((d_exc, P_, NE), jnp.int32),
+        "inh_buf": jnp.zeros((d_inh, P_, NI), jnp.int32),
+    }
+
+    def tick(state, t):
+        k = jax.random.fold_in(key, t)
+        # 1. drain FIFOs (spikes that arrive this tick)
+        arr_exc = state["exc_buf"][t % d_exc]          # (P, NE) from prev PE
+        arr_inh = state["inh_buf"][t % d_inh]          # (P, NI) same PE
+        n_fifo = arr_exc.sum(axis=1) + arr_inh.sum(axis=1)
+
+        # 2. DVFS: FIFO occupancy picks the PL before processing
+        pl = dvfs.select_pl(n_fifo)                    # (P,)
+
+        # 3. synaptic accumulation (event-driven integer MAC)
+        i_ff = jnp.einsum("pe,pen->pn", arr_exc, net.w_ff)
+        i_in = jnp.einsum("pi,pie->pe", arr_inh, net.w_inh)
+        i_syn = i_ff.at[:, :NE].add(i_in)
+        noise = jax.random.normal(k, (P_, N))
+        i_syn = i_syn + jnp.round(noise * net.noise_sigma_fx).astype(jnp.int32)
+        stim = jnp.where(
+            (t < net.stim_ticks),
+            jnp.zeros((P_, N), jnp.int32).at[0, :NE].set(net.stim_current_fx),
+            jnp.zeros((P_, N), jnp.int32))
+        i_syn = i_syn + stim
+
+        # 4. LIF update (bit-identical to the Pallas kernel)
+        v, ref, spk = lif_step_ref(state["v"], state["ref"], i_syn, **net.lif)
+        spk_exc, spk_inh = spk[:, :NE], spk[:, NE:]
+
+        # 5. route spikes (multicast ring -> next PE FIFO; inh -> own FIFO)
+        exc_out = ring_exchange(spk_exc)               # to PE i+1
+        exc_buf = state["exc_buf"].at[t % d_exc].set(exc_out)
+        inh_buf = state["inh_buf"].at[t % d_inh].set(spk_inh)
+
+        # 6. accounting
+        syn_events = (jnp.einsum("pe,pe->p", arr_exc, net.deg_ff)
+                      + jnp.einsum("pi,pi->p", arr_inh, net.deg_inh))
+        e_dvfs = em.tick_energy(pl, N, syn_events, dvfs=True)
+        e_pl3 = em.tick_energy(jnp.full((P_,), 2), N, syn_events, dvfs=False)
+
+        new_state = {"v": v, "ref": ref, "exc_buf": exc_buf, "inh_buf": inh_buf}
+        rec = {
+            "pl": pl, "n_fifo": n_fifo, "syn_events": syn_events,
+            "spikes_exc": spk_exc.astype(jnp.int8),
+            "spikes_inh": spk_inh.astype(jnp.int8),
+            "e_dvfs_baseline": e_dvfs["baseline"],
+            "e_dvfs_neuron": e_dvfs["neuron"],
+            "e_dvfs_synapse": e_dvfs["synapse"],
+            "t_sp": e_dvfs["t_sp"],
+            "e_pl3_baseline": e_pl3["baseline"],
+            "e_pl3_neuron": e_pl3["neuron"],
+            "e_pl3_synapse": e_pl3["synapse"],
+        }
+        return new_state, rec
+
+    _, recs = jax.lax.scan(tick, state0, jnp.arange(n_ticks))
+    return recs
+
+
+def synfire_power_table(recs, t_sys_s: float = 1e-3) -> dict:
+    """Average per-PE power [mW], DVFS vs only-PL3 — the paper's Table III."""
+    def avg_mw(x):
+        return float(jnp.mean(x) / t_sys_s * 1e3)
+
+    out = {}
+    for mode in ("dvfs", "pl3"):
+        base = avg_mw(recs[f"e_{mode}_baseline"])
+        neur = avg_mw(recs[f"e_{mode}_neuron"])
+        syn = avg_mw(recs[f"e_{mode}_synapse"])
+        out[mode] = {"baseline": base, "neuron": neur, "synapse": syn,
+                     "total": base + neur + syn}
+    out["reduction"] = {
+        k: 1.0 - out["dvfs"][k] / out["pl3"][k]
+        for k in ("baseline", "neuron", "synapse", "total")
+    }
+    return out

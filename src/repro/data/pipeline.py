@@ -1,0 +1,83 @@
+"""Deterministic, seekable synthetic data pipeline.
+
+Every batch is a pure function of (seed, step) — the property fault
+tolerance needs: after restart-from-checkpoint at step k the pipeline
+resumes at exactly batch k with no replay log.  Tokens follow per-sequence
+affine recurrences over the vocab (x_{t+1} = a x_t + c mod V) mixed with
+noise tokens, so models have real structure to learn and training loss
+decreases measurably within a few hundred steps.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    noise_prob: float = 0.05
+    n_styles: int = 8             # size of the fixed (a, c) recurrence pool
+    kind: str = "tokens"          # "tokens" | "frames"
+    d_model: int = 0              # frames mode
+    num_codebooks: int = 1
+
+
+class SyntheticTokenPipeline:
+    def __init__(self, cfg: PipelineConfig):
+        self.cfg = cfg
+        self._key = jax.random.PRNGKey(cfg.seed)
+
+    def batch(self, step: int) -> dict:
+        """Batch for `step` (deterministic, O(1) seek)."""
+        cfg = self.cfg
+        k = jax.random.fold_in(self._key, step)
+        if cfg.kind == "frames":
+            kf, kl = jax.random.split(k)
+            frames = jax.random.normal(
+                kf, (cfg.global_batch, cfg.seq_len, cfg.d_model), jnp.bfloat16)
+            labels = jax.random.randint(
+                kl, (cfg.global_batch, cfg.seq_len, cfg.num_codebooks),
+                0, cfg.vocab_size, jnp.int32)
+            return {"frames": frames, "labels": labels}
+        ka, kc, k0, kn, km = jax.random.split(k, 5)
+        B, S, V = cfg.global_batch, cfg.seq_len + 1, cfg.vocab_size
+        # each sequence follows one of n_styles fixed affine recurrences, so
+        # transitions are memorizable (loss decreases) yet step-deterministic
+        kpool = jax.random.PRNGKey(cfg.seed + 7919)
+        pool_a = 1 + 2 * jax.random.randint(
+            jax.random.fold_in(kpool, 0), (cfg.n_styles,), 0, (V - 1) // 2)
+        pool_c = jax.random.randint(
+            jax.random.fold_in(kpool, 1), (cfg.n_styles,), 0, V)
+        style = jax.random.randint(ka, (B,), 0, cfg.n_styles)
+        a = pool_a[style][:, None]
+        c = pool_c[style][:, None]
+        x0 = jax.random.randint(k0, (B, 1), 0, V)
+        t = jnp.arange(S)[None, :]
+        # closed form of the affine recurrence would need modpow; iterate in
+        # log space instead: x_t = a^t x_0 + c (a^t - 1)/(a - 1)  (mod V).
+        # Cheap approach: cumulative product via scan-free powers is
+        # overkill for synthetic data — use a simple cumulative loop.
+        def step_fn(x, _):
+            nx = (x * a[:, 0] + c[:, 0]) % V
+            return nx, nx
+        _, seq = jax.lax.scan(step_fn, x0[:, 0], None, length=S - 1)
+        tokens = jnp.concatenate([x0, seq.T], axis=1)
+        noise = jax.random.randint(kn, tokens.shape, 0, V)
+        mask = jax.random.uniform(km, tokens.shape) < cfg.noise_prob
+        tokens = jnp.where(mask, noise, tokens)
+        return {"tokens": tokens.astype(jnp.int32)}
+
+    def shard_for(self, batch: dict, mesh, shardings=None):
+        """Place a global batch onto the mesh (data-parallel leading dim)."""
+        from repro.dist.sharding import data_spec
+        from jax.sharding import NamedSharding
+        return jax.tree.map(
+            lambda x: jax.device_put(
+                x, NamedSharding(mesh, data_spec(x.shape, mesh, 0))), batch)

@@ -1,0 +1,1 @@
+from repro.ft.loop import FaultTolerantLoop, LoopConfig

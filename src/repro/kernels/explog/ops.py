@@ -1,0 +1,54 @@
+"""jit'd wrappers: arbitrary shapes + float-facing helpers for the SNN stack."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.explog.explog import (
+    BLOCK_ROWS, LANES, fx_exp_pallas, fx_log_pallas,
+)
+from repro.kernels.explog.ref import FX_ONE
+
+
+def _shape_to_blocks(x):
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    per = BLOCK_ROWS * LANES
+    pad = (-n) % per
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANES), n
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fx_exp(x, interpret=True):
+    """x: int32 s16.15 any shape -> exp(x) int32 s16.15."""
+    x2d, n = _shape_to_blocks(x)
+    out = fx_exp_pallas(x2d, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fx_log(x, interpret=True):
+    """x: int32 s16.15 any shape, > 0 -> ln(x) int32 s16.15."""
+    x2d, n = _shape_to_blocks(x)
+    out = fx_log_pallas(x2d, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(x.shape)
+
+
+def to_fx(x_float):
+    return jnp.round(jnp.asarray(x_float, jnp.float32) * FX_ONE).astype(jnp.int32)
+
+
+def from_fx(x_fx):
+    return x_fx.astype(jnp.float32) / FX_ONE
+
+
+def fx_exp_float(x_float, interpret=True):
+    return from_fx(fx_exp(to_fx(x_float), interpret=interpret))
+
+
+def fx_log_float(x_float, interpret=True):
+    return from_fx(fx_log(to_fx(x_float), interpret=interpret))

@@ -1,0 +1,76 @@
+"""Bit-exact pure-jnp oracle of the fixed-point exp/log accelerator.
+
+Reimplements the SpiNNaker2 elementary-function accelerator algorithm
+([10] Partzsch et al. ISCAS'17, [11] Mikaitis et al. ARITH'18) in s16.15
+fixed point: iterative shift-add decomposition over ln(1 + 2^-k) factors —
+multiplier-free in hardware; here each iteration is a vectorized
+compare/select, which maps onto the TPU VPU.
+
+The Pallas kernel must match these references BIT-EXACTLY; scientific
+accuracy vs. float exp/log is asserted separately in tests (rel err
+< 2^-12 over the supported range).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+FRAC = 15
+FX_ONE = 1 << FRAC                      # 1.0 in s16.15
+LN2 = int(round(np.log(2.0) * FX_ONE))  # 22713
+
+# ln(1 + 2^-k) table, k = 1..15, s16.15
+LOG_TABLE = tuple(int(round(np.log1p(2.0 ** -k) * FX_ONE)) for k in range(1, 16))
+
+_MAX_EXP_ARG = (15 << FRAC)             # overflow guard for s16.15 result
+
+
+def fx_exp_ref(x):
+    """x: int32 s16.15 -> exp(x) int32 s16.15 (saturating)."""
+    x = x.astype(jnp.int32)
+    x = jnp.clip(x, -_MAX_EXP_ARG, _MAX_EXP_ARG)
+    n = jnp.floor_divide(x, LN2)                       # integer part, base 2
+    r = x - n * LN2                                    # r in [0, ln2)
+    y = jnp.full_like(x, FX_ONE)
+    for k in range(1, 16):
+        lk = LOG_TABLE[k - 1]
+        take = r >= lk
+        r = jnp.where(take, r - lk, r)
+        y = jnp.where(take, y + (y >> k), y)
+    # first-order remainder: y *= (1 + r),  r < 2^-15
+    y = y + ((y * r) >> FRAC)
+    # apply 2^n with saturation
+    n = jnp.clip(n, -31, 31)
+    y = jnp.where(n >= 0,
+                  jnp.where(n >= 16, jnp.int32(2**31 - 1), y << jnp.minimum(n, 15)),
+                  y >> jnp.minimum(-n, 31))
+    return y
+
+
+def fx_log_ref(x):
+    """x: int32 s16.15, x > 0 -> ln(x) int32 s16.15 (x <= 0 -> INT32_MIN/2)."""
+    x = x.astype(jnp.int32)
+    bad = x <= 0
+    xs = jnp.maximum(x, 1)
+    # normalize to z in [1, 2): find n = floor(log2(xs)) - FRAC
+    n = jnp.zeros_like(xs)
+    z = xs
+    for shift in (15, 8, 4, 2, 1):                     # downward normalize
+        cond = z >= (FX_ONE << shift)
+        z = jnp.where(cond, z >> shift, z)
+        n = jnp.where(cond, n + shift, n)
+    for shift in (8, 4, 2, 1, 1):                      # upward normalize
+        cond = z < (FX_ONE >> (shift - 1))
+        z = jnp.where(cond, z << shift, z)
+        n = jnp.where(cond, n - shift, n)
+    acc = n * LN2
+    w = jnp.full_like(xs, FX_ONE)
+    for k in range(1, 16):
+        lk = LOG_TABLE[k - 1]
+        w_next = w + (w >> k)
+        take = w_next <= z
+        w = jnp.where(take, w_next, w)
+        acc = jnp.where(take, acc + lk, acc)
+    # first-order remainder: ln(z/w) ~ (z - w) / w,  w ~ z
+    acc = acc + jnp.floor_divide((z - w) << FRAC, w)
+    return jnp.where(bad, jnp.int32(-(2**30)), acc)

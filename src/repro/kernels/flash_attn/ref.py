@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q, k, v: (BH, S, D) -> (BH, S, D)."""
+    S = q.shape[1]
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.lif.ops import lif_step, lif_params_fx
+from repro.kernels.lif.ref import lif_step_ref, fx_mul

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle of the fixed-point LIF neuron update.
+
+SpiNNaker-style s16.15 arithmetic: exponential membrane decay (the decay
+factor alpha = exp(-dt/tau) is produced by the exp accelerator), synaptic
+current injection, threshold/reset, refractory hold.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+FRAC = 15
+
+
+def fx_mul(a, b):
+    """s16.15 multiply without int32 overflow: split a into hi/lo parts."""
+    ah = a >> FRAC                      # arithmetic shift (floor)
+    al = a & 0x7FFF
+    return ah * b + ((al * b) >> FRAC)
+
+
+def lif_step_ref(v, ref_ct, i_syn, *, alpha, v_th, v_reset, ref_ticks):
+    """One 1 ms tick.  All int32 s16.15 except ref_ct (int32 counts).
+
+    Returns (v_new, ref_new, spikes int32).
+    """
+    v = v.astype(jnp.int32)
+    active = ref_ct <= 0
+    v1 = fx_mul(v, jnp.int32(alpha)) + i_syn.astype(jnp.int32)
+    spike = active & (v1 >= v_th)
+    v_new = jnp.where(spike, v_reset, jnp.where(active, v1, v))
+    ref_new = jnp.where(spike, ref_ticks, jnp.maximum(ref_ct - 1, 0))
+    return v_new, ref_new, spike.astype(jnp.int32)

@@ -1,0 +1,2 @@
+from repro.kernels.mac_conv.ops import mac_conv2d
+from repro.kernels.mac_conv.ref import mac_conv2d_ref

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for MAC conv2d: patch extraction + exact int32 matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def mac_conv2d_ref(x, w, *, stride=(1, 1), padding="VALID"):
+    """x: (B,H,W,Cin) int8/uint8; w: (KH,KW,Cin,Cout) -> (B,Ho,Wo,Cout) int32."""
+    B, H, W, Cin = x.shape
+    KH, KW, _, Cout = w.shape
+    sh, sw = stride
+    if padding == "SAME":
+        Ho = -(-H // sh)
+        Wo = -(-W // sw)
+        ph = max((Ho - 1) * sh + KH - H, 0)
+        pw = max((Wo - 1) * sw + KW - W, 0)
+        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
+                        (pw // 2, pw - pw // 2), (0, 0)))
+        H, W = x.shape[1], x.shape[2]
+    Ho = (H - KH) // sh + 1
+    Wo = (W - KW) // sw + 1
+    xi = x.astype(jnp.int32)
+    out = jnp.zeros((B, Ho, Wo, Cout), jnp.int32)
+    for dh in range(KH):
+        for dw in range(KW):
+            patch = jax.lax.slice(
+                xi, (0, dh, dw, 0),
+                (B, dh + sh * (Ho - 1) + 1, dw + sw * (Wo - 1) + 1, Cin),
+                (1, sh, sw, 1))
+            out = out + jnp.einsum("bhwc,co->bhwo", patch,
+                                   w[dh, dw].astype(jnp.int32))
+    return out

@@ -1,0 +1,2 @@
+from repro.kernels.mac_gemm.ops import mac_gemm, mac_gemm_dequant
+from repro.kernels.mac_gemm.ref import mac_gemm_ref, mac_gemm_dequant_ref

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the MAC GEMM kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mac_gemm_ref(a, b):
+    """a: (M,K) int8/uint8; b: (K,N) int8/uint8 -> (M,N) int32 exact."""
+    return jnp.matmul(a.astype(jnp.int32), b.astype(jnp.int32))
+
+
+def mac_gemm_dequant_ref(a, b, a_scale, b_scale):
+    """Dequantized W8A8 matmul: per-row a_scale (M,), per-col b_scale (N,)."""
+    acc = mac_gemm_ref(a, b).astype(jnp.float32)
+    return acc * a_scale[:, None] * b_scale[None, :]

@@ -1,0 +1,197 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # CPU-only artifact suppression: XLA:CPU converts bf16 dot operands to
+    # f32 and LICM hoists whole-cache converts out of the layer scan, which
+    # would falsely dominate the memory analysis (a TPU bf16 MXU dot has no
+    # such convert).  Keeping the convert inside the loop makes
+    # memory_analysis faithful to the TPU target.
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion"
+)
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input shape) cell, lower + compile the step
+function against the production mesh (single-pod 16x16 and multi-pod
+2x16x16), print memory/cost analysis, derive roofline terms and write a
+JSON artifact under artifacts/dryrun/.
+
+The two os.environ lines above MUST precede every other import (jax locks
+the device count on first init), which is why this module sets XLA_FLAGS
+before importing anything else.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh single --out artifacts/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro import configs
+from repro import roofline as RL
+from repro.dist.cells import make_cell
+from repro.launch.mesh import make_production_mesh
+from repro.models.loopctl import unrolled
+
+
+def _variant_cost(cfg, shape, mesh, k: int) -> tuple:
+    """Lower an UNROLLED k-group variant and return (flops, bytes, coll).
+
+    cost_analysis() counts while-loop bodies once; unrolled variants with
+    1 and 2 layer-groups give exact per-group deltas for linear
+    extrapolation to the full depth (layer groups are homogeneous)."""
+    vcfg = dataclasses.replace(
+        cfg, num_layers=cfg.pattern_len * k + len(cfg.rem_layers))
+    cell = make_cell(vcfg, shape, mesh)
+    with mesh, unrolled():
+        compiled = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                           out_shardings=cell.out_shardings,
+                           donate_argnums=cell.donate_argnums
+                           ).lower(*cell.args).compile()
+    cost = compiled.cost_analysis()
+    coll = RL.parse_collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def extrapolated_costs(cfg, shape, mesh) -> tuple:
+    """(flops, bytes, coll_dict) extrapolated to the full group count."""
+    G = cfg.num_groups
+    f1, b1, c1 = _variant_cost(cfg, shape, mesh, 1)
+    f2, b2, c2 = _variant_cost(cfg, shape, mesh, 2)
+    scale = lambda a2, a1: a2 + (G - 2) * (a2 - a1)
+    coll = {k: scale(c2.get(k, 0), c1.get(k, 0)) for k in c2}
+    coll["total"] = sum(v for k, v in coll.items()
+                        if k not in ("count", "total"))
+    return scale(f2, f1), scale(b2, b1), coll
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             *, save_hlo: bool = False, roofline: bool = True) -> dict:
+    cfg = configs.get_arch(arch_name)
+    shape = configs.SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch_name}_{shape_name}_{mesh_name}".replace("/", "-")
+    out_path = out_dir / f"{tag}.json"
+    t0 = time.time()
+    record = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+              "status": "error"}
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cell = make_cell(cfg, shape, mesh)
+        with mesh:
+            jitted = jax.jit(cell.fn,
+                             in_shardings=cell.in_shardings,
+                             out_shardings=cell.out_shardings,
+                             donate_argnums=cell.donate_argnums)
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        mem_stats = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": (mem.argument_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    - mem.alias_size_in_bytes),
+        }
+        chips = mesh.devices.size
+        mflops = RL.model_flops(cfg, shape)
+        # roofline terms from trip-count-exact unrolled extrapolation
+        t1 = time.time()
+        if roofline:
+            flops_x, bytes_x, coll_x = extrapolated_costs(cfg, shape, mesh)
+        else:   # multi-pod pass: compile/memory proof only (see DESIGN.md)
+            flops_x = float(cost.get("flops", 0.0))
+            bytes_x = float(cost.get("bytes accessed", 0.0))
+            coll_x = RL.parse_collective_bytes(hlo)
+        t_roofline = time.time() - t1
+        roof = RL.analyze(arch_name, shape_name, mesh_name, chips, flops_x,
+                          bytes_x, coll_x, mflops, mem_stats)
+        record.update(dataclasses.asdict(roof))
+        record.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "roofline_s": round(t_roofline, 1),
+            "hlo_bytes": len(hlo),
+            "flops_scan_raw": float(cost.get("flops", 0.0)),
+            "collectives_scan_raw": RL.parse_collective_bytes(hlo)["total"],
+        })
+        if save_hlo:
+            (out_dir / f"{tag}.hlo.txt").write_text(hlo)
+        print(f"[OK] {tag}: flops/dev={roof.flops:.3e} "
+              f"bytes/dev={roof.bytes_accessed:.3e} "
+              f"coll/dev={roof.collective_bytes:.3e} "
+              f"dom={roof.dominant} "
+              f"peakmem={mem_stats['peak_estimate_bytes']/2**30:.2f}GiB "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)",
+              flush=True)
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {tag}: {record['error'][:400]}", flush=True)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(record, indent=1))
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-roofline", action="store_true",
+                    help="compile/memory proof only (multi-pod pass)")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    archs = configs.ASSIGNED if args.arch == "all" else args.arch.split(",")
+    shapes = list(configs.SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = n_skip = 0
+    for arch_name in archs:
+        cfg = configs.get_arch(arch_name)
+        for shape_name in shapes:
+            shape = configs.SHAPES[shape_name]
+            if not configs.shape_applicable(cfg, shape):
+                print(f"[SKIP] {arch_name} x {shape_name}: "
+                      f"not sub-quadratic (see DESIGN.md)", flush=True)
+                n_skip += 1
+                continue
+            for multi in meshes:
+                mesh_name = "pod2x16x16" if multi else "pod16x16"
+                tag = f"{arch_name}_{shape_name}_{mesh_name}"
+                if args.skip_existing and (out_dir / f"{tag}.json").exists():
+                    prev = json.loads((out_dir / f"{tag}.json").read_text())
+                    if prev.get("status") == "ok":
+                        n_skip += 1
+                        continue
+                rec = run_cell(arch_name, shape_name, multi, out_dir,
+                               save_hlo=args.save_hlo,
+                               roofline=not args.no_roofline)
+                if rec["status"] == "ok":
+                    n_ok += 1
+                else:
+                    n_fail += 1
+    print(f"dry-run done: ok={n_ok} fail={n_fail} skip={n_skip}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

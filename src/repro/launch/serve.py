@@ -1,0 +1,58 @@
+"""Serving launcher: batched decode with queue-driven (DVFS-style) widths.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --smoke \
+        --requests 12 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serve.engine import Request, ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    import jax.numpy as jnp
+    params = jax.tree.map(
+        lambda x: x.astype(jnp.bfloat16)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+
+    eng = ServeEngine(cfg, params, max_seq=args.max_seq)
+    rng = np.random.default_rng(args.seed)
+    for i in range(args.requests):
+        eng.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, args.prompt_len,
+                                dtype=np.int32),
+            max_new_tokens=args.max_new))
+    t0 = time.time()
+    stats = eng.run()
+    dt = time.time() - t0
+    print(f"served {args.requests} requests, {stats['tokens']} tokens in "
+          f"{dt:.1f}s ({stats['tokens']/dt:.1f} tok/s)")
+    print(f"rounds={stats['rounds']} batch widths={stats['batch_hist']} "
+          f"(queue-DVFS levels: {eng.dvfs.batch_levels})")
+    return stats
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-4b --smoke \
+        --steps 200 --batch 8 --seq 128
+
+--smoke runs the mechanically reduced config on the host devices; without
+it the full config is built (requires real accelerators for execution; use
+launch/dryrun.py to validate compilation against the production mesh).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.data.pipeline import PipelineConfig, SyntheticTokenPipeline
+from repro.ft.loop import FaultTolerantLoop, LoopConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init
+from repro.train.step import make_train_step
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=20)
+    ap.add_argument("--moe-dense", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    mesh = make_host_mesh()
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"mesh={dict(mesh.shape)}")
+
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt_state = adamw_init(params)
+    pipe = SyntheticTokenPipeline(PipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, seed=args.seed,
+        kind="frames" if cfg.frontend == "encodec" else "tokens",
+        d_model=cfg.d_model, num_codebooks=cfg.num_codebooks))
+
+    step_fn = jax.jit(make_train_step(
+        cfg, opt=AdamWConfig(lr=args.lr), microbatch=args.microbatch,
+        remat="full", moe_dense=args.moe_dense, ce_chunk=min(args.seq, 512),
+        total_steps=args.steps, warmup_steps=max(args.steps // 20, 10)),
+        donate_argnums=(0, 1))
+
+    ckpt = CheckpointManager(f"{args.ckpt_dir}/{cfg.name}")
+    loop = FaultTolerantLoop(
+        LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                   install_signal_handlers=True),
+        ckpt, step_fn, pipe)
+
+    t0 = time.time()
+    state, log = loop.run(params, opt_state)
+    for rec in log:
+        if rec["step"] % args.log_every == 0 or rec["step"] == args.steps - 1:
+            print(f"step {rec['step']:5d} loss {rec['loss']:.4f} "
+                  f"({rec['dt']*1e3:.0f} ms)")
+    dt = time.time() - t0
+    if log:
+        first = sum(r["loss"] for r in log[:10]) / max(len(log[:10]), 1)
+        last = sum(r["loss"] for r in log[-10:]) / max(len(log[-10:]), 1)
+        print(f"done in {dt:.1f}s; loss {first:.4f} -> {last:.4f}")
+        return {"first": first, "last": last, "log": log}
+    return {}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models import layers, moe, rglru, rwkv6, transformer
+from repro.models.registry import input_specs, batch_specs, make_dummy_batch

@@ -1,0 +1,678 @@
+"""Shared model building blocks.
+
+Parameters are declared as ``PSpec`` trees (shape + logical axes + init
+style); the same tree mechanically yields real initialized params, abstract
+``ShapeDtypeStruct`` trees for the dry-run, and logical-axis trees for the
+sharding rules in ``repro.dist.sharding``.
+
+All matmuls run in bf16 with fp32 accumulation; norms / softmax / rope and
+recurrence gates run in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.loopctl import map_or_loop, scan_or_loop
+
+# ---------------------------------------------------------------------------
+# Logical axis names (mapped to mesh axes by repro.dist.sharding rules)
+# ---------------------------------------------------------------------------
+EMBED = "embed"        # d_model           -> fsdp ("data")
+VOCAB = "vocab"        # vocabulary        -> "model"
+HEADS = "heads"        # flattened q_dim   -> "model"
+KV = "kv"              # flattened kv_dim  -> "model"
+MLP = "mlp"            # d_ff              -> "model"
+EXPERT = "expert"      # MoE experts       -> "model"
+LAYER = "layer"        # stacked scan axis -> unsharded
+VOCAB_TBL = "vocab_tbl"  # embedding-table vocab dim (serve: unsharded)
+EMBED_TBL = "embed_tbl"  # embedding-table d dim (serve: "model")
+NONE = None
+
+
+@dataclass(frozen=True)
+class PSpec:
+    shape: tuple
+    axes: tuple
+    init: str = "normal"      # "normal" | "out" | "zeros" | "ones" | "embed"
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _path_seed(path: str) -> int:
+    return int(np.uint32(hash(path) & 0xFFFFFFFF))
+
+
+def init_leaf(spec: PSpec, rng: jax.Array, path: str, depth_scale: float = 1.0):
+    key = jax.random.fold_in(rng, _path_seed(path))
+    dt = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape, jnp.float32)).astype(dt)
+    scale = 0.02
+    if spec.init == "out":
+        scale = 0.02 * depth_scale
+    return (scale * jax.random.normal(key, spec.shape, jnp.float32)).astype(dt)
+
+
+def tree_paths(tree, prefix=""):
+    """Flatten a nested dict/list tree of PSpec into {path: spec}."""
+    out = {}
+    if isinstance(tree, PSpec):
+        out[prefix] = tree
+    elif isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(tree_paths(v, f"{prefix}/{k}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(tree_paths(v, f"{prefix}/{i}"))
+    else:
+        raise TypeError(type(tree))
+    return out
+
+
+def init_params(spec_tree, rng: jax.Array, depth_scale: float = 1.0):
+    def walk(node, prefix):
+        if isinstance(node, PSpec):
+            return init_leaf(node, rng, prefix, depth_scale)
+        if isinstance(node, dict):
+            return {k: walk(v, f"{prefix}/{k}") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return [walk(v, f"{prefix}/{i}") for i, v in enumerate(node)]
+        raise TypeError(type(node))
+    return walk(spec_tree, "")
+
+
+def param_shapes(spec_tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        spec_tree, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def param_axes(spec_tree):
+    return jax.tree.map(lambda s: s.axes, spec_tree,
+                        is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+# ---------------------------------------------------------------------------
+# Norms (fp32 math)
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_pspecs(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": PSpec((d,), (EMBED,), "zeros"),
+                "bias": PSpec((d,), (EMBED,), "zeros")}
+    return {"scale": PSpec((d,), (EMBED,), "zeros")}
+
+
+def rmsnorm_bf16(x, scale, eps=1e-6):
+    """Variance in f32 (fused into the reduce); multiplies in x.dtype —
+    avoids materializing full-sequence f32 copies of the residual."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * r * (1.0 + scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_bf16(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    y = (x - mu.astype(x.dtype)) * r
+    return y * (1.0 + scale.astype(jnp.float32)).astype(x.dtype)         + bias.astype(x.dtype)
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "layernorm":
+        if cfg.norm_bf16_mul:
+            return layernorm_bf16(x, p["scale"], p["bias"], cfg.norm_eps)
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    if cfg.norm_bf16_mul:
+        return rmsnorm_bf16(x, p["scale"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Positional embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, rope_pct: float, base: float):
+    rot = int(head_dim * rope_pct)
+    rot -= rot % 2
+    inv = 1.0 / (base ** (np.arange(0, rot, 2, dtype=np.float64) / rot))
+    return rot, jnp.asarray(inv, jnp.float32)
+
+
+def apply_rope(x, pos, *, base=10_000.0, pct=1.0):
+    """x: (..., S, H, D); pos: broadcastable to (..., S). Half-split layout."""
+    D = x.shape[-1]
+    rot, inv = rope_freqs(D, pct, base)
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    ang = pos[..., None].astype(jnp.float32) * inv          # (..., S, rot/2)
+    sin = jnp.sin(ang)[..., None, :]                         # (..., S, 1, rot/2)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    y1 = x1f * cos - x2f * sin
+    y2 = x2f * cos + x1f * sin
+    out = jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype)], axis=-1)
+    return jnp.concatenate([out, xp], axis=-1) if rot < D else out
+
+
+def sinusoidal_emb(pos, d_model: int, dtype=jnp.float32):
+    """pos: (...,) -> (..., d_model)."""
+    half = d_model // 2
+    freq = np.exp(-np.log(10_000.0) * np.arange(half) / half)
+    ang = pos[..., None].astype(jnp.float32) * jnp.asarray(freq, jnp.float32)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+_NEG = -1e30
+
+
+def _mask(qpos, kpos, window):
+    """qpos: (Q,), kpos: (K,) -> bool (Q, K). Causal, optional sliding window."""
+    m = kpos[None, :] <= qpos[:, None]
+    if window:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m
+
+
+def attention_dense(q, k, v, qpos, kpos, *, window=0, kv_len=None):
+    """q: (B,Sq,KH,G,D)  k,v: (B,Sk,KH,D).  Reference / small-seq path."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    m = _mask(qpos, kpos, window)
+    if kv_len is not None:                       # decode: valid cache prefix
+        m &= ((kpos < kv_len) & (kpos >= 0))[None, :]
+    s = jnp.where(m[None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return o
+
+
+def _bw_attn_fwd(q, k, v, qpos, kpos, window, cq, ck):
+    """Blockwise online-softmax forward.  Returns (out f32, lse f32).
+
+    q: (B,Sq,KH,G,D); k,v: (B,Sk,KH,D); qpos: (Sq,), kpos: (Sk,)
+    """
+    B, Sq, KH, G, D = q.shape
+    Sk = k.shape[1]
+    nq, nk = Sq // cq, Sk // ck
+    scale = 1.0 / np.sqrt(D)
+
+    qs = q.reshape(B, nq, cq, KH, G, D).transpose(1, 0, 2, 3, 4, 5)
+    qp = qpos.reshape(nq, cq)
+    ks = k.reshape(B, nk, ck, KH, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, ck, KH, D).transpose(1, 0, 2, 3, 4)
+    kp = kpos.reshape(nk, ck)
+
+    def one_q(args):
+        qc, qpc = args                                     # (B,cq,KH,G,D), (cq,)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kc, vc, kpc = inp
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _mask(qpc, kpc, window)[None, None, None]
+            s = jnp.where(msk, s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(msk, p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KH, G, cq), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, cq, D), jnp.float32)
+        (m, l, acc), _ = scan_or_loop(kv_step, (m0, l0, a0), (ks, vs, kp))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))           # (B,KH,G,cq)
+        return o.transpose(0, 3, 1, 2, 4), lse.transpose(0, 3, 1, 2)
+
+    outs, lses = map_or_loop(one_q, (qs, qp))              # (nq,B,cq,...)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KH, G, D)
+    lse = lses.transpose(1, 0, 2, 3, 4).reshape(B, Sq, KH, G)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash_attention(cfg_static, q, k, v, qpos, kpos):
+    """Flash attention with recompute-in-backward VJP (O(S) residuals)."""
+    window, cq, ck = cfg_static
+    out, _ = _bw_attn_fwd(q, k, v, qpos, kpos, window, cq, ck)
+    return out.astype(q.dtype)
+
+
+def _flash_fwd(cfg_static, q, k, v, qpos, kpos):
+    window, cq, ck = cfg_static
+    out, lse = _bw_attn_fwd(q, k, v, qpos, kpos, window, cq, ck)
+    return out.astype(q.dtype), (q, k, v, qpos, kpos, out, lse)
+
+
+def _flash_bwd(cfg_static, res, dout):
+    window, cq, ck = cfg_static
+    q, k, v, qpos, kpos, out, lse = res
+    B, Sq, KH, G, D = q.shape
+    Sk = k.shape[1]
+    nq, nk = Sq // cq, Sk // ck
+    scale = 1.0 / np.sqrt(D)
+
+    do = dout.astype(jnp.float32)
+    delta = jnp.sum(do * out, axis=-1)                     # (B,Sq,KH,G)
+
+    qs = q.reshape(B, nq, cq, KH, G, D).transpose(1, 0, 2, 3, 4, 5)
+    dos = do.reshape(B, nq, cq, KH, G, D).transpose(1, 0, 2, 3, 4, 5)
+    dls = delta.reshape(B, nq, cq, KH, G).transpose(1, 0, 2, 3, 4)
+    lss = lse.reshape(B, nq, cq, KH, G).transpose(1, 0, 2, 3, 4)
+    qp = qpos.reshape(nq, cq)
+    ks = k.reshape(B, nk, ck, KH, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, ck, KH, D).transpose(1, 0, 2, 3, 4)
+    kp = kpos.reshape(nk, ck)
+
+    def q_step(carry, inp):
+        dk_acc, dv_acc = carry                             # (nk,B,ck,KH,D) f32
+        qc, doc, dlc, lsc, qpc = inp
+
+        def kv_step(dq_acc, inp2):
+            kc, vc, kpc = inp2
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _mask(qpc, kpc, window)[None, None, None]
+            p = jnp.exp(s - lsc.transpose(0, 2, 3, 1)[..., None])
+            p = jnp.where(msk, p, 0.0)                     # (B,KH,G,cq,ck)
+            dv = jnp.einsum("bhgqk,bqhgd->bkhd", p, doc)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", doc, vc)
+            ds = p * (dp - dlc.transpose(0, 2, 3, 1)[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum("bhgqk,bkhd->bqhgd", ds, kc)
+            dk = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qc)
+            return dq_acc, (dk, dv)
+
+        dq0 = jnp.zeros((B, cq, KH, G, D), jnp.float32)
+        dq, (dks, dvs) = scan_or_loop(kv_step, dq0, (ks, vs, kp))
+        return (dk_acc + dks, dv_acc + dvs), dq
+
+    z = jnp.zeros((nk, B, ck, KH, D), jnp.float32)
+    (dk_s, dv_s), dqs = scan_or_loop(q_step, (z, z),
+                                     (qs, dos, dls, lss, qp))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KH, G, D).astype(q.dtype)
+    dk = dk_s.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KH, D).astype(k.dtype)
+    dv = dv_s.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KH, D).astype(v.dtype)
+    return dq, dk, dv, None, None
+
+
+_flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention_blockwise(q, k, v, qpos, kpos, *, window=0,
+                        chunk_q=1024, chunk_kv=1024, impl="baseline"):
+    B, Sq, KH, G, D = q.shape
+    Sk = k.shape[1]
+    from repro.models.loopctl import unroll_mode
+    if unroll_mode():
+        # roofline-extrapolation lowers: total FLOPs/bytes are chunk-size
+        # invariant (full masked sweep is S^2 either way; packed triangle
+        # changes only by the O(S*cq) diagonal), so bigger chunks -> far
+        # fewer unrolled bodies -> much faster cost-analysis compiles
+        chunk_q = max(chunk_q, 4096)
+        chunk_kv = max(chunk_kv, 4096)
+    cq = min(chunk_q, Sq)
+    ck = min(chunk_kv, Sk)
+    assert Sq % cq == 0 and Sk % ck == 0, (Sq, cq, Sk, ck)
+    if impl == "packed" and Sq == Sk:
+        return _attention_packed(q, k, v, qpos, kpos, window=window,
+                                 cq=cq, ck=ck)
+    return _flash_attention((window, cq, ck), q, k, v, qpos, kpos)
+
+
+# ---------------------------------------------------------------------------
+# Packed attention (beyond-paper perf path, selected via cfg.attn_impl)
+#
+# The baseline flash sweep visits every (q-chunk, kv-chunk) pair and masks —
+# 2x wasted FLOPs for causal, ~nk/2 x for sliding windows.  The packed path
+# visits only chunk pairs that can contain unmasked entries:
+#   * sliding window (window <= ck): exactly 2 kv chunks per q chunk,
+#   * causal (+ wide window): the lower triangle intersected with the
+#     window band — nq(nq+1)/2 pairs instead of nq*nk for pure causal.
+# ---------------------------------------------------------------------------
+
+def _attention_packed(q, k, v, qpos, kpos, *, window, cq, ck):
+    B, Sq, KH, G, D = q.shape
+    nq, nk = Sq // cq, Sq // ck
+    scale = 1.0 / np.sqrt(D)
+    qs = q.reshape(B, nq, cq, KH, G, D).transpose(1, 0, 2, 3, 4, 5)
+    qp = qpos.reshape(nq, cq)
+    ks = k.reshape(B, nk, ck, KH, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, ck, KH, D).transpose(1, 0, 2, 3, 4)
+    kp = kpos.reshape(nk, ck)
+
+    def block(qc, qpc, kc, vc, kpc, m, l, acc):
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                       preferred_element_type=jnp.float32) * scale
+        msk = _mask(qpc, kpc, window)[None, None, None]
+        s = jnp.where(msk, s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # p in bf16: exp(s - m) is in (0, 1], safe at bf16 resolution; the
+        # row-sum and pv-einsum still accumulate in f32.  Halves the
+        # dominant HBM traffic of the attention inner loop.
+        p = jnp.where(msk, jnp.exp(s - m_new[..., None]), 0.0)             .astype(vc.dtype)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1, dtype=jnp.float32)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vc,
+            preferred_element_type=jnp.float32)
+        return m_new, l, acc
+
+    if window and window <= ck and cq == ck:
+        # each q chunk sees kv chunks {i-1, i} only
+        def one_q(args):
+            qc, qpc, i = args
+            m = jnp.full((B, KH, G, cq), _NEG, jnp.float32)
+            l = jnp.zeros((B, KH, G, cq), jnp.float32)
+            acc = jnp.zeros((B, KH, G, cq, D), jnp.float32)
+            for off in (1, 0):                     # chunk i-1, then i
+                j = jnp.maximum(i - off, 0)
+                kc = jax.lax.dynamic_index_in_dim(ks, j, 0, keepdims=False)
+                vc = jax.lax.dynamic_index_in_dim(vs, j, 0, keepdims=False)
+                kpc = jax.lax.dynamic_index_in_dim(kp, j, 0, keepdims=False)
+                # when i == 0 the "previous" chunk is a duplicate of chunk 0;
+                # shifting its positions far negative makes the window mask
+                # kill every entry
+                kpc = jnp.where((i - off) < 0, kpc - Sq - window, kpc)
+                m, l, acc = block(qc, qpc, kc, vc, kpc, m, l, acc)
+            o = acc / jnp.maximum(l, 1e-30)[..., None]
+            return o.transpose(0, 3, 1, 2, 4)
+
+        outs = map_or_loop(one_q, (qs, qp, jnp.arange(nq)))
+        return outs.transpose(1, 0, 2, 3, 4, 5).reshape(
+            B, Sq, KH, G, D).astype(q.dtype)
+
+    # causal (optionally window-banded): packed static pair list
+    def _keep(i, j):
+        if j * ck > (i + 1) * cq - 1:
+            return False                           # entirely in the future
+        if window and (j + 1) * ck - 1 <= i * cq - window:
+            return False                           # entirely past the window
+        return True
+
+    pairs = np.array([(i, j) for i in range(nq) for j in range(nk)
+                      if _keep(i, j)], np.int32)
+    i_idx = jnp.asarray(pairs[:, 0])
+    j_idx = jnp.asarray(pairs[:, 1])
+
+    @functools.partial(jax.checkpoint, prevent_cse=False,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def pair_step(carry, ij):
+        m, l, acc = carry                          # (nq,B,KH,G,cq[,D])
+        i, j = ij
+        qc = jax.lax.dynamic_index_in_dim(qs, i, 0, keepdims=False)
+        qpc = jax.lax.dynamic_index_in_dim(qp, i, 0, keepdims=False)
+        kc = jax.lax.dynamic_index_in_dim(ks, j, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vs, j, 0, keepdims=False)
+        kpc = jax.lax.dynamic_index_in_dim(kp, j, 0, keepdims=False)
+        mi = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
+        ai = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
+        mi, li, ai = block(qc, qpc, kc, vc, kpc, mi, li, ai)
+        m = jax.lax.dynamic_update_index_in_dim(m, mi, i, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, li, i, 0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, ai, i, 0)
+        return (m, l, acc), None
+
+    m0 = jnp.full((nq, B, KH, G, cq), _NEG, jnp.float32)
+    l0 = jnp.zeros((nq, B, KH, G, cq), jnp.float32)
+    a0 = jnp.zeros((nq, B, KH, G, cq, D), jnp.float32)
+    (m, l, acc), _ = scan_or_loop(pair_step, (m0, l0, a0), (i_idx, j_idx))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]     # (nq,B,KH,G,cq,D)
+    o = o.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, KH, G, D)
+    return o.astype(q.dtype)
+
+
+def attention(q, k, v, qpos, kpos, *, window=0, kv_len=None,
+              chunk_q=1024, chunk_kv=1024, force_dense=False,
+              impl="baseline"):
+    """Dispatch: dense for small problems / decode, blockwise otherwise."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    if force_dense or kv_len is not None or (Sq * Sk) <= 4 * 1024 * 1024:
+        return attention_dense(q, k, v, qpos, kpos, window=window, kv_len=kv_len)
+    return attention_blockwise(q, k, v, qpos, kpos, window=window,
+                               chunk_q=chunk_q, chunk_kv=chunk_kv, impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + qk-norm + GQA)
+# ---------------------------------------------------------------------------
+
+def attn_pspecs(cfg):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "wq": PSpec((d, qd), (EMBED, HEADS)),
+        "wk": PSpec((d, kvd), (EMBED, KV)),
+        "wv": PSpec((d, kvd), (EMBED, KV)),
+        "wo": PSpec((qd, d), (HEADS, EMBED), "out"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = PSpec((qd,), (HEADS,), "zeros")
+        p["bk"] = PSpec((kvd,), (KV,), "zeros")
+        p["bv"] = PSpec((kvd,), (KV,), "zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = PSpec((cfg.head_dim,), (NONE,), "zeros")
+        p["k_norm"] = PSpec((cfg.head_dim,), (NONE,), "zeros")
+    return p
+
+
+def attn_apply(cfg, p, x, qpos, *, kind="attn", cache=None, kv_len=None,
+               mesh=None):
+    """x: (B,S,d).  cache: None (full-seq) or dict(k,v,(ring) pos) for decode.
+
+    Returns (out, new_cache).
+    """
+    B, S, d = x.shape
+    KH, H, D = cfg.num_kv_heads, cfg.num_heads, cfg.head_dim
+    G = H // KH
+    window = cfg.window_size if kind == "local" else 0
+    base = cfg.rope_base
+    if kind == "attn" and cfg.rope_base_global:
+        base = cfg.rope_base_global
+
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, H, D)
+    k = k.reshape(B, S, KH, D)
+    v = v.reshape(B, S, KH, D)
+    att_KH, att_G = KH, G
+    if mesh is not None and cache is None:
+        from repro.dist.sharding import act_hint
+        tp = mesh.shape.get("model", 1)
+        if KH % tp == 0:
+            # head-parallel attention
+            q = act_hint(q, mesh, ("batch", None, "model", None))
+            k = act_hint(k, mesh, ("batch", None, "model", None))
+            v = act_hint(v, mesh, ("batch", None, "model", None))
+        elif cfg.attn_part == "expand" and H % tp == 0:
+            # GQA expansion: repeat KV to the full head count so every
+            # einsum shards head-parallel (beyond-paper perf path; the
+            # baseline context-parallel fallback replicates attention
+            # compute across "model" when kv_heads < TP)
+            k = jnp.repeat(k, G, axis=2)
+            v = jnp.repeat(v, G, axis=2)
+            att_KH, att_G = H, 1
+            q = act_hint(q, mesh, ("batch", None, "model", None))
+            k = act_hint(k, mesh, ("batch", None, "model", None))
+            v = act_hint(v, mesh, ("batch", None, "model", None))
+        else:
+            # context-parallel attention: shard q rows, replicate kv
+            q = act_hint(q, mesh, ("batch", "model", None, None))
+            k = act_hint(k, mesh, ("batch", None, None, None))
+            v = act_hint(v, mesh, ("batch", None, None, None))
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, qpos, base=base, pct=cfg.rope_pct)
+        k = apply_rope(k, qpos, base=base, pct=cfg.rope_pct)
+    q = q.reshape(B, S, att_KH, att_G, D)
+
+    if cache is None:
+        kpos = qpos
+        o = attention(q, k, v, qpos, kpos, window=window, impl=cfg.attn_impl)
+        new_cache = None
+    else:
+        # decode: insert k,v at cache position, attend over valid prefix
+        ck, cv = cache["k"], cache["v"]                     # (B,Sc,KH,D)
+        Sc = ck.shape[1]
+        if window and Sc == window:                          # ring buffer
+            slot = jnp.mod(kv_len, window)
+        else:
+            slot = kv_len
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        if window and Sc == window:
+            kpos = _ring_positions(kv_len, window)        # abs pos per slot
+        else:
+            kpos = jnp.arange(Sc)
+        o = attention_dense(q, ck, cv, qpos, kpos, window=window,
+                            kv_len=kv_len + 1)
+        new_cache = {"k": ck, "v": cv}
+
+    o = o.reshape(B, S, H * D)
+    out = jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def _ring_positions(kv_len, window):
+    """Absolute position stored in each ring slot after writing pos=kv_len."""
+    slots = jnp.arange(window)
+    cur_slot = jnp.mod(kv_len, window)
+    # slot s holds position kv_len - ((cur_slot - s) mod window)
+    return kv_len - jnp.mod(cur_slot - slots, window)
+
+
+def init_attn_cache(cfg, batch, max_seq, kind, dtype=jnp.bfloat16):
+    S = min(max_seq, cfg.window_size) if kind == "local" and cfg.window_size else max_seq
+    shape = (batch, S, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_cache_specs(cfg, batch, max_seq, kind, dtype=jnp.bfloat16):
+    S = min(max_seq, cfg.window_size) if kind == "local" and cfg.window_size else max_seq
+    shape = (batch, S, cfg.num_kv_heads, cfg.head_dim)
+    sds = jax.ShapeDtypeStruct(shape, dtype)
+    return {"k": sds, "v": sds}
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+def mlp_pspecs(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {"wi": PSpec((d, f), (EMBED, MLP)),
+                "wg": PSpec((d, f), (EMBED, MLP)),
+                "wo": PSpec((f, d), (MLP, EMBED), "out")}
+    if cfg.mlp == "rwkv_channel_mix":
+        return {"wk": PSpec((d, f), (EMBED, MLP)),
+                "wv": PSpec((f, d), (MLP, EMBED), "out"),
+                "wr": PSpec((d, d), (EMBED, EMBED)),
+                "mix_k": PSpec((d,), (EMBED,), "zeros"),
+                "mix_r": PSpec((d,), (EMBED,), "zeros")}
+    return {"wi": PSpec((d, f), (EMBED, MLP)),
+            "wo": PSpec((f, d), (MLP, EMBED), "out")}
+
+
+def mlp_apply(cfg, p, x, mesh=None):
+    dt = x.dtype
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp == "swiglu" else partial(jax.nn.gelu, approximate=True)
+        h = act(jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dt))) \
+            * jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt))
+    elif cfg.mlp == "relu2":
+        h = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt))))
+    else:  # gelu
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt)),
+                        approximate=True)
+    if mesh is not None:
+        from repro.dist.sharding import act_hint
+        h = act_hint(h, mesh, ("batch", None, "model"))
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_pspecs(cfg):
+    p = {"table": PSpec((cfg.vocab_size, cfg.d_model),
+                        (VOCAB_TBL, EMBED_TBL), "embed")}
+    if not cfg.tie_embeddings:
+        if cfg.num_codebooks > 1:
+            p["head"] = PSpec((cfg.num_codebooks, cfg.d_model, cfg.vocab_size),
+                              (NONE, EMBED, VOCAB))
+        else:
+            p["head"] = PSpec((cfg.d_model, cfg.vocab_size), (EMBED, VOCAB))
+    return p
+
+
+def embed_lookup(cfg, p, tokens, dtype=jnp.bfloat16):
+    x = jnp.take(p["table"], tokens, axis=0).astype(dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+    return x
+
+
+def head_matrix(cfg, p):
+    """(d, V) or (C, d, V) head weights."""
+    if cfg.tie_embeddings:
+        return p["table"].T
+    return p["head"]

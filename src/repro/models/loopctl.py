@@ -1,0 +1,68 @@
+"""Trace-time loop-mode switch.
+
+XLA's ``cost_analysis()`` counts a ``while`` body ONCE, regardless of trip
+count, so scan-based lowerings under-report FLOPs/bytes/collectives.  For
+roofline accounting the dry-run lowers small unrolled variants (1 and 2
+layer-groups) under ``unrolled()`` — every lax.scan/map in the model
+becomes a Python loop — and linearly extrapolates to the full depth, which
+is exact for homogeneous stacks (see repro/launch/dryrun.py).
+
+The production path always uses scans (small HLO, fast compiles); tests
+assert both paths agree numerically.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+_UNROLL = False
+
+
+def unroll_mode() -> bool:
+    return _UNROLL
+
+
+@contextmanager
+def unrolled():
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = True
+    try:
+        yield
+    finally:
+        _UNROLL = prev
+
+
+def scan_or_loop(body, carry, xs, *, length=None):
+    """lax.scan drop-in honoring the unroll switch.
+
+    body(carry, x) -> (carry, y).  Returns (carry, ys) with ys stacked (or
+    None if every y is None).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if not _UNROLL:
+        return jax.lax.scan(body, carry, xs, length=length)
+    n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x)
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def map_or_loop(fn, xs):
+    """lax.map drop-in honoring the unroll switch."""
+    import jax
+    import jax.numpy as jnp
+
+    if not _UNROLL:
+        return jax.lax.map(fn, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    outs = [fn(jax.tree.map(lambda a: a[i], xs)) for i in range(n)]
+    return jax.tree.map(lambda *a: jnp.stack(a), *outs)

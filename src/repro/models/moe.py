@@ -1,0 +1,248 @@
+"""Mixture-of-Experts block.
+
+Dispatch is the rate-based twin of SpiNNaker2 multicast spike routing
+(DESIGN.md section 2): a token's top-k expert assignment is a "spike with
+payload" — the router key picks destinations, the activation vector is the
+graded payload.  Two implementations:
+
+* ``moe_apply_dense``  — oracle: every expert sees every token, masked
+  combine.  O(T * E * ff) FLOPs; used for tests and tiny configs only.
+* ``moe_apply``        — production sort-based capacity dispatch: tokens are
+  scattered to (E, C, d) buffers (C = capacity), expert FFNs run as grouped
+  einsums sharded expert-parallel on the "model" mesh axis, results are
+  combined with router weights.  Overflowing tokens are dropped (standard
+  Switch-style), underflow is padding.
+
+Aux losses: load-balance (Switch) + router z-loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import EMBED, EXPERT, MLP, NONE, PSpec
+
+
+def moe_pspecs(cfg):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    p = {"router": PSpec((d, E), (EMBED, EXPERT))}
+    if cfg.mlp in ("swiglu", "geglu"):
+        p.update({
+            "wi": PSpec((E, d, f), (EXPERT, EMBED, MLP)),
+            "wg": PSpec((E, d, f), (EXPERT, EMBED, MLP)),
+            "wo": PSpec((E, f, d), (EXPERT, MLP, EMBED), "out"),
+        })
+    else:
+        p.update({
+            "wi": PSpec((E, d, f), (EXPERT, EMBED, MLP)),
+            "wo": PSpec((E, f, d), (EXPERT, MLP, EMBED), "out"),
+        })
+    return p
+
+
+def _router(cfg, p, x):
+    """x: (T, d) -> (probs (T,E) f32, logits f32)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    return jax.nn.softmax(logits, axis=-1), logits
+
+
+def _expert_ffn(cfg, p, xe):
+    """xe: (E, C, d) -> (E, C, d); grouped einsum, expert axis sharded (EP)."""
+    dt = xe.dtype
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("ecd,edf->ecf", xe, p["wg"].astype(dt))) \
+            * jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(dt))
+    elif cfg.mlp == "relu2":
+        h = jnp.square(jax.nn.relu(jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(dt))))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(dt)))
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt))
+
+
+def aux_losses(probs, sel_onehot):
+    """Switch load-balance loss + z-loss ingredients.
+
+    probs: (T, E) f32; sel_onehot: (T, E) f32 (summed over k).
+    """
+    E = probs.shape[-1]
+    density = jnp.mean(sel_onehot, axis=0)           # fraction routed
+    density_proxy = jnp.mean(probs, axis=0)
+    lb = E * jnp.sum(density * density_proxy)
+    return lb
+
+
+def moe_apply(cfg, p, x, *, capacity_factor=None):
+    """Sort-based top-k dispatch with capacity.  x: (B, S, d)."""
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.num_experts, cfg.experts_per_token
+    cf = capacity_factor or cfg.capacity_factor
+    C = int(np.ceil(cf * T * K / E))
+    C = max(C, 1)
+
+    xt = x.reshape(T, d)
+    probs, logits = _router(cfg, p, xt)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)            # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)    # renormalize
+
+    # --- capacity assignment: position of each (token, k) within its expert
+    flat_e = gate_idx.reshape(-1)                            # (T*K,)
+    # rank of each assignment among same-expert assignments, in token order
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # (T*K, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - 1                # inclusive -> 0-based
+    my_pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = my_pos < C                                        # drop overflow
+
+    # --- scatter tokens into (E, C, d)
+    dst = jnp.where(keep, flat_e * C + my_pos, E * C)        # overflow -> trash row
+    buf = jnp.zeros((E * C + 1, d), x.dtype)
+    src = jnp.repeat(xt, K, axis=0) if K > 1 else xt
+    # token index for each flat assignment
+    tok_idx = jnp.repeat(jnp.arange(T), K) if K > 1 else jnp.arange(T)
+    buf = buf.at[dst].add(src.astype(x.dtype))
+    xe = buf[: E * C].reshape(E, C, d)
+
+    ye = _expert_ffn(cfg, p, xe)                             # (E, C, d)
+
+    # --- combine back: gather each assignment's output, weight, sum over K
+    yt = ye.reshape(E * C, d)
+    yt = jnp.concatenate([yt, jnp.zeros((1, d), yt.dtype)], axis=0)
+    gathered = yt[dst]                                       # (T*K, d)
+    w = (gate_vals.reshape(-1) * keep.astype(jnp.float32)).astype(x.dtype)
+    contrib = gathered * w[:, None]
+    out = jnp.zeros((T, d), x.dtype).at[tok_idx].add(contrib)
+
+    sel = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32).sum(axis=1)
+    lb_loss = aux_losses(probs, sel)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return out.reshape(B, S, d), {"lb_loss": lb_loss, "z_loss": z_loss}
+
+
+def moe_apply_sharded(cfg, p, x, mesh, *, capacity_factor=None):
+    """Expert-parallel MoE via shard_map (production path).
+
+    Tokens are sharded over the batch axes and *replicated* over "model";
+    each model rank dispatches locally (no cross-shard cumsum) and runs only
+    its E/TP local experts; a single psum over "model" combines expert
+    outputs — the same collective shape as a dense TP FFN.  This mirrors the
+    SpiNNaker2 multicast router: the routing decision (key -> destinations)
+    is computed where the spike originates, and only payloads destined for a
+    core traverse its link.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.sharding import batch_axes
+
+    ba = batch_axes(mesh)
+    bspec = ba if len(ba) > 1 else (ba[0] if ba else None)
+    tp = mesh.shape["model"]
+    E = cfg.num_experts
+    assert E % tp == 0, (E, tp)
+    e_loc = E // tp
+
+    def local(px, x_loc):
+        probs, logits = _router(cfg, px, x_loc.reshape(-1, x_loc.shape[-1]))
+        B, S, d = x_loc.shape
+        T = B * S
+        K = cfg.experts_per_token
+        cf = capacity_factor or cfg.capacity_factor
+        C = max(int(np.ceil(cf * T * K / E)), 1)
+
+        gate_vals, gate_idx = jax.lax.top_k(probs, K)
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+        flat_e = gate_idx.reshape(-1)
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        pos_in_e = jnp.cumsum(onehot, axis=0) - 1
+        my_pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+        keep = my_pos < C
+
+        # local expert range for this model rank
+        ridx = jax.lax.axis_index("model")
+        lo = ridx * e_loc
+        mine2 = (gate_idx >= lo) & (gate_idx < lo + e_loc) \
+            & keep.reshape(T, K)                            # (T, K)
+        my_pos2 = my_pos.reshape(T, K)
+        xt = x_loc.reshape(T, d)
+
+        # scatter one top-k slot at a time: K scatters of (T, d), no (T*K, d)
+        buf = jnp.zeros((e_loc * C + 1, d), x_loc.dtype)
+        for kk in range(K):
+            dst_k = jnp.where(mine2[:, kk],
+                              (gate_idx[:, kk] - lo) * C + my_pos2[:, kk],
+                              e_loc * C)
+            buf = buf.at[dst_k].add(xt)
+        xe = buf[: e_loc * C].reshape(e_loc, C, d)
+
+        ye = _expert_ffn(cfg, px, xe)
+
+        yt = jnp.concatenate(
+            [ye.reshape(e_loc * C, d), jnp.zeros((1, d), ye.dtype)], axis=0)
+        out = jnp.zeros((T, d), x_loc.dtype)
+        for kk in range(K):
+            dst_k = jnp.where(mine2[:, kk],
+                              (gate_idx[:, kk] - lo) * C + my_pos2[:, kk],
+                              e_loc * C)
+            w = (gate_vals[:, kk] * mine2[:, kk].astype(jnp.float32)
+                 ).astype(x_loc.dtype)
+            out = out + yt[dst_k] * w[:, None]
+        def _aux():
+            sel = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32).sum(axis=1)
+            lb = aux_losses(probs, sel)
+            zl = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+            if ba:
+                lb = jax.lax.pmean(lb, ba if len(ba) > 1 else ba[0])
+                zl = jax.lax.pmean(zl, ba if len(ba) > 1 else ba[0])
+            return lb, zl
+
+        if cfg.moe_scatter_out and S % tp == 0:
+            # reduce-scatter along seq: combine partial expert outputs into
+            # the sequence-parallel residual layout directly
+            out = out.reshape(B, S, d)
+            out = jax.lax.psum_scatter(out, "model", scatter_dimension=1,
+                                       tiled=True)
+            return out, *_aux()
+        out = jax.lax.psum(out, "model")
+        return out.reshape(B, S, d), *_aux()
+
+    pspecs = {
+        "router": P(),
+        "wi": P("model", None, None),
+        "wo": P("model", None, None),
+    }
+    if "wg" in p:
+        pspecs["wg"] = P("model", None, None)
+    scatter = cfg.moe_scatter_out and x.shape[1] % tp == 0
+    out_spec = P(bspec, "model", None) if scatter else P(bspec, None, None)
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(pspecs, P(bspec, None, None)),
+        out_specs=(out_spec, P(), P()),
+        check_vma=False,
+    )
+    out, lb, zl = fn({k: p[k] for k in pspecs}, x)
+    return out, {"lb_loss": lb, "z_loss": zl}
+
+
+def moe_apply_dense(cfg, p, x):
+    """Oracle: run every expert on every token, weighted combine (no drops)."""
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    probs, logits = _router(cfg, p, xt)
+    gate_vals, gate_idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    # full (T, E) combine weights
+    w = jnp.sum(jax.nn.one_hot(gate_idx, cfg.num_experts) * gate_vals[..., None],
+                axis=1)                                      # (T, E)
+    ye = _expert_ffn(cfg, p, jnp.broadcast_to(xt[None], (cfg.num_experts, T, d)))
+    out = jnp.einsum("etd,te->td", ye.astype(jnp.float32), w).astype(x.dtype)
+    sel = jax.nn.one_hot(gate_idx, cfg.num_experts, dtype=jnp.float32).sum(axis=1)
+    lb_loss = aux_losses(probs, sel)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return out.reshape(B, S, d), {"lb_loss": lb_loss, "z_loss": z_loss}

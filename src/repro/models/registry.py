@@ -1,0 +1,85 @@
+"""Input specifications per (arch x shape) cell.
+
+``input_specs`` returns abstract ``ShapeDtypeStruct`` stand-ins for every
+input of the step function the cell lowers (shannon/kernels pattern:
+weak-type-correct, shardable, no device allocation).  ``make_dummy_batch``
+materializes small concrete batches for smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import transformer as T
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """Abstract batch for one cell (tokens or stubbed frontend frames)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.frontend == "encodec":
+            return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+                    "labels": jax.ShapeDtypeStruct((B, S, cfg.num_codebooks), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S + 1), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.frontend == "encodec":
+            return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    # decode: one new token with a cache of length S
+    if cfg.frontend == "encodec":
+        return {"frames": jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, *, param_dtype=None):
+    """Full argument specs for the step fn this cell lowers.
+
+    train  -> (params_f32, opt_state, batch, step)
+    prefill-> (params_bf16, batch)
+    decode -> (params_bf16, caches, pos, batch)
+    """
+    batch = batch_specs(cfg, shape)
+    if shape.kind == "train":
+        params = T.abstract_params(cfg)
+        opt = {"mu": params, "nu": params,
+               "count": jax.ShapeDtypeStruct((), jnp.int32)}
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+        return {"params": params, "opt_state": opt, "batch": batch, "step": step}
+    pdt = param_dtype or jnp.bfloat16
+    params = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, pdt if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype),
+        T.abstract_params(cfg))
+    if shape.kind == "prefill":
+        return {"params": params, "batch": batch}
+    caches = T.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return {"params": params, "caches": caches, "pos": pos, "batch": batch}
+
+
+def make_dummy_batch(cfg: ArchConfig, shape_kind: str, batch: int, seq: int,
+                     rng: np.random.Generator | None = None):
+    """Concrete random batch for smoke tests (small sizes only)."""
+    rng = rng or np.random.default_rng(0)
+    V = cfg.vocab_size
+    if shape_kind == "train":
+        if cfg.frontend == "encodec":
+            return {
+                "frames": jnp.asarray(
+                    rng.standard_normal((batch, seq, cfg.d_model)), jnp.bfloat16),
+                "labels": jnp.asarray(
+                    rng.integers(0, V, (batch, seq, cfg.num_codebooks)), jnp.int32),
+            }
+        return {"tokens": jnp.asarray(
+            rng.integers(0, V, (batch, seq + 1)), jnp.int32)}
+    if shape_kind == "prefill":
+        if cfg.frontend == "encodec":
+            return {"frames": jnp.asarray(
+                rng.standard_normal((batch, seq, cfg.d_model)), jnp.bfloat16)}
+        return {"tokens": jnp.asarray(rng.integers(0, V, (batch, seq)), jnp.int32)}
+    if cfg.frontend == "encodec":
+        return {"frames": jnp.asarray(
+            rng.standard_normal((batch, 1, cfg.d_model)), jnp.bfloat16)}
+    return {"tokens": jnp.asarray(rng.integers(0, V, (batch, 1)), jnp.int32)}

@@ -1,0 +1,136 @@
+"""Griffin-style recurrent block with RG-LRU (RecurrentGemma, arXiv:2402.19427).
+
+Block: x -> [W_x -> causal depthwise conv(4) -> RG-LRU] * gelu(W_gate x) -> W_o
+
+RG-LRU (fp32):
+    i_t = sigmoid(W_i u_t + b_i)
+    a_t = exp(-c * softplus(Lambda) * sigmoid(W_a u_t + b_a)),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the sequence (the
+recurrence is linear in h); decode is a single fused step with O(1) state.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import EMBED, NONE, PSpec
+from repro.models.loopctl import scan_or_loop
+
+LRU = "lru"          # recurrent width axis -> "model"
+_C = 8.0             # RG-LRU decay sharpness constant
+
+
+def rglru_pspecs(cfg):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    cw = cfg.conv_width
+    return {
+        "wx": PSpec((d, w), (EMBED, LRU)),
+        "wgate": PSpec((d, w), (EMBED, LRU)),
+        "conv_w": PSpec((cw, w), (NONE, LRU)),
+        "conv_b": PSpec((w,), (LRU,), "zeros"),
+        "wi": PSpec((w, w), (NONE, LRU)),
+        "bi": PSpec((w,), (LRU,), "zeros"),
+        "wa": PSpec((w, w), (NONE, LRU)),
+        "ba": PSpec((w,), (LRU,), "zeros"),
+        "lam": PSpec((w,), (LRU,), "ones"),
+        "wo": PSpec((w, d), (LRU, EMBED), "out"),
+    }
+
+
+def _causal_conv(p, u, conv_cache):
+    """Depthwise causal conv, width cw.  u: (B,S,w); cache: (B,cw-1,w)."""
+    cw = p["conv_w"].shape[0]
+    full = jnp.concatenate([conv_cache.astype(u.dtype), u], axis=1)
+    out = jnp.zeros_like(u)
+    for i in range(cw):
+        # tap i uses x_{t-(cw-1-i)}
+        out = out + full[:, i: i + u.shape[1]] * p["conv_w"][i].astype(u.dtype)
+    out = out + p["conv_b"].astype(u.dtype)
+    new_cache = full[:, -(cw - 1):] if cw > 1 else conv_cache
+    return out, new_cache
+
+
+def _gates(p, uf):
+    """uf: (B,C,w) f32 -> (a, b) recurrence coefficients."""
+    gate_i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", uf, p["wi"].astype(jnp.float32))
+                            + p["bi"].astype(jnp.float32))
+    gate_a = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", uf, p["wa"].astype(jnp.float32))
+                            + p["ba"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * gate_a  # <= 0
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed from log_a for precision near a ~ 1
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * gate_i * uf
+
+
+def rg_lru(p, u, h0, chunk=1024):
+    """u: (B,S,w); h0: (B,w) f32.  Returns (y (B,S,w) f32, h_final).
+
+    Chunked: outer lax.scan carries the state across chunks; within a chunk
+    the linear recurrence runs as an associative_scan.  The chunk body is
+    rematerialized so backward keeps O(chunk) residuals.
+    """
+    uf = u.astype(jnp.float32)
+    if u.shape[1] == 1:                                     # decode fast path
+        a, b = _gates(p, uf)
+        h = a[:, 0] * h0 + b[:, 0]
+        return h[:, None], h
+
+    from repro.models.loopctl import unroll_mode
+    if unroll_mode():
+        chunk = max(chunk, 8192)          # fewer unrolled bodies, same flops
+    B, S, w = uf.shape
+    C = min(chunk, S)
+    while S % C:
+        C -= 1
+    N = S // C
+    us = uf.reshape(B, N, C, w).transpose(1, 0, 2, 3)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    @functools.partial(jax.checkpoint, prevent_cse=False,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(h, uc):
+        a, b = _gates(p, uc)
+        b = b.at[:, 0].add(a[:, 0] * h)
+        _, h_seq = jax.lax.associative_scan(combine, (a, b), axis=1)
+        return h_seq[:, -1], h_seq
+
+    h_final, ys = scan_or_loop(body, h0, us)
+    return ys.transpose(1, 0, 2, 3).reshape(B, S, w), h_final
+
+
+def rglru_block_apply(cfg, p, x, cache=None):
+    """x: (B,S,d).  cache: {"conv": (B,cw-1,w), "state": (B,w) f32}."""
+    B, S, d = x.shape
+    w = cfg.lru_width or d
+    cw = cfg.conv_width
+    conv_cache = (cache["conv"] if cache is not None
+                  else jnp.zeros((B, cw - 1, w), x.dtype))
+    h0 = cache["state"] if cache is not None else jnp.zeros((B, w), jnp.float32)
+
+    u = jnp.einsum("bsd,dw->bsw", x, p["wx"].astype(x.dtype))
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["wgate"].astype(x.dtype)),
+                       approximate=True)
+    u, new_conv = _causal_conv(p, u, conv_cache)
+    y, h_final = rg_lru(p, u, h0)
+    y = y.astype(x.dtype) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, p["wo"].astype(x.dtype))
+    return out, {"conv": new_conv, "state": h_final}
+
+
+def rglru_cache_specs(cfg, batch, dtype=jnp.bfloat16):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, w), dtype),
+        "state": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+    }

@@ -1,0 +1,212 @@
+"""RWKV-6 "Finch" blocks (arXiv:2404.05892): attention-free time mixing with
+data-dependent decay + channel mixing.
+
+The WKV recurrence per head (state S in R^{hd_k x hd_v}):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = (S_{t-1} + diag(u * k_t) v_t ... ) read with r_t:
+    y_t = r_t @ S_{t-1} + (r_t . (u * k_t)) v_t
+
+``wkv_chunked`` evaluates it in chunks of C steps so the bulk of the FLOPs
+are (C x C x hd) einsums (MXU-friendly) instead of a length-S scan.  All
+decay factors are handled in log space with exponents <= 0, so the chunked
+form is numerically stable for arbitrary data-dependent decays (the naive
+factored GLA form overflows via exp(-cumsum)).  ``wkv_sequential`` is the
+oracle used by tests and by single-token decode.
+
+Hybrid-neuromorphic note (DESIGN.md section 2): the data-dependent decay w_t is
+the LM-scale analogue of activity-dependent dynamics — state "energy" decays
+unless events (tokens) refresh it, exactly the DVFS principle applied to
+state instead of voltage.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import EMBED, HEADS, LAYER, MLP, NONE, PSpec
+from repro.models.loopctl import scan_or_loop
+
+_LORA_MIX = 32      # token-shift mixing LoRA width
+_LORA_DECAY = 64    # decay LoRA width
+
+
+def time_mix_pspecs(cfg):
+    d = cfg.d_model
+    return {
+        "mu_base": PSpec((d,), (EMBED,), "zeros"),
+        "mu_wkvrg": PSpec((5, d), (NONE, EMBED), "zeros"),
+        "w1_mix": PSpec((d, 5 * _LORA_MIX), (EMBED, NONE)),
+        "w2_mix": PSpec((5, _LORA_MIX, d), (NONE, NONE, EMBED)),
+        "w0": PSpec((d,), (EMBED,), "zeros"),
+        "w1_decay": PSpec((d, _LORA_DECAY), (EMBED, NONE)),
+        "w2_decay": PSpec((_LORA_DECAY, d), (NONE, EMBED), "zeros"),
+        "u": PSpec((d,), (EMBED,), "zeros"),
+        "wr": PSpec((d, d), (EMBED, HEADS)),
+        "wk": PSpec((d, d), (EMBED, HEADS)),
+        "wv": PSpec((d, d), (EMBED, HEADS)),
+        "wg": PSpec((d, d), (EMBED, HEADS)),
+        "wo": PSpec((d, d), (HEADS, EMBED), "out"),
+        "ln_x_scale": PSpec((d,), (EMBED,), "zeros"),
+        "ln_x_bias": PSpec((d,), (EMBED,), "zeros"),
+    }
+
+
+def _token_shift(x, prev):
+    """prev: (B,1,d) state (zeros at seq start) -> x_{t-1} sequence."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix_vectors(p, x, sx):
+    """Data-dependent token-shift mixing -> 5 mixed inputs (w,k,v,r,g)."""
+    xx = x + sx * p["mu_base"].astype(x.dtype)
+    lora = jnp.einsum("bsd,dl->bsl", xx, p["w1_mix"].astype(x.dtype))
+    B, S, _ = x.shape
+    lora = jnp.tanh(lora.reshape(B, S, 5, _LORA_MIX))
+    mixes = jnp.einsum("bsfl,fld->bsfd", lora, p["w2_mix"].astype(x.dtype))
+    mixes = mixes + p["mu_wkvrg"].astype(x.dtype)[None, None]
+    # x_i = x + sx * mix_i for each of the five streams
+    return x[:, :, None] + sx[:, :, None] * mixes            # (B,S,5,d)
+
+
+def _decay(p, xw):
+    """Log decay lw = -exp(w0 + lora(xw)) in fp32, <= 0."""
+    lora = jnp.einsum("bsd,dl->bsl", xw.astype(jnp.float32),
+                      p["w1_decay"].astype(jnp.float32))
+    lora = jnp.einsum("bsl,ld->bsd", jnp.tanh(lora),
+                      p["w2_decay"].astype(jnp.float32))
+    return -jnp.exp(jnp.clip(p["w0"].astype(jnp.float32) + lora, -12.0, 3.0))
+
+
+def wkv_sequential(r, k, v, lw, u, state0):
+    """Oracle WKV.  r,k,v: (B,S,H,D); lw: (B,S,H,D) log-decay; u: (H,D).
+
+    state0: (B,H,D,D) f32 (k-index first).  Returns (y (B,S,H,D) f32, state).
+    """
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+
+    def step(S, inp):
+        rt, kt, vt, lwt = inp                               # (B,H,D)
+        w = jnp.exp(lwt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S) \
+            + jnp.einsum("bhk,bhk,bhv->bhv", rt, u[None] * kt, vt)
+        S = S * w[..., None] + jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        return S, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (rf, kf, vf, lw))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def wkv_chunked(r, k, v, lw, u, state0, chunk=32):
+    """Chunked WKV, exact (log-space, exponents <= 0).  Shapes as above."""
+    B, S, H, D = r.shape
+    C = min(chunk, S)
+    assert S % C == 0, (S, C)
+    N = S // C
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    rs, ks, vs, lws = (t.reshape(B, N, C, H, D).transpose(1, 0, 2, 3, 4)
+                       for t in (rf, kf, vf, lw))
+
+    tri = jnp.tril(jnp.ones((C, C), jnp.bool_), -1)          # j < i
+
+    import functools
+    @functools.partial(jax.checkpoint, prevent_cse=False,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def one_chunk(S0, inp):
+        rc, kc, vc, lwc = inp                                # (B,C,H,D)
+        incl = jnp.cumsum(lwc, axis=1)                       # (B,C,H,D)
+        excl = incl - lwc
+        # inter-chunk: y_i += (r_i * exp(excl_i)) @ S0
+        y = jnp.einsum("bchk,bhkv->bchv", rc * jnp.exp(excl), S0)
+        # intra-chunk: pairwise decay P_ij = exp(excl_i - incl_j), j < i
+        expo = excl[:, :, None] - incl[:, None, :, :, :]     # (B,C,C,H,D) <= 0
+        P = jnp.exp(jnp.where(tri[None, :, :, None, None], expo, -jnp.inf))
+        A = jnp.einsum("bihk,bjhk,bijhk->bijh", rc, kc, P)
+        y = y + jnp.einsum("bijh,bjhv->bihv", A, vc)
+        # bonus diagonal term
+        y = y + jnp.einsum("bchk,bchk,bchv->bchv", rc, u[None, None] * kc, vc)
+        # state update: S = exp(b_C) * S0 + sum_j exp(b_C - incl_j) k_j v_j^T
+        total = incl[:, -1]                                  # (B,H,D)
+        Snew = S0 * jnp.exp(total)[..., None] + jnp.einsum(
+            "bchk,bchv->bhkv", kc * jnp.exp(total[:, None] - incl), vc)
+        return Snew, y
+
+    state, ys = scan_or_loop(one_chunk, state0, (rs, ks, vs, lws))
+    return ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D), state
+
+
+def group_norm(y, scale, bias, H, eps=1e-5):
+    """Per-head layer norm over head_dim (GroupNorm with H groups)."""
+    B, S, d = y.shape
+    yh = y.reshape(B, S, H, d // H).astype(jnp.float32)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    yh = yh.reshape(B, S, d)
+    return yh * (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)
+
+
+def time_mix_apply(cfg, p, x, cache=None, chunk=32, use_chunked=True,
+                   mesh=None):
+    """x: (B,S,d).  cache: None or {"shift": (B,1,d), "state": (B,H,D,D) f32}.
+
+    Returns (out, new_cache).
+    """
+    B, S, d = x.shape
+    H = d // cfg.rwkv_head_size
+    D = cfg.rwkv_head_size
+    prev = cache["shift"] if cache is not None else jnp.zeros((B, 1, d), x.dtype)
+    state0 = (cache["state"] if cache is not None
+              else jnp.zeros((B, H, D, D), jnp.float32))
+
+    sx = _token_shift(x, prev) - x
+    mixed = _mix_vectors(p, x, sx)                           # (B,S,5,d)
+    xw, xk, xv, xr, xg = (mixed[:, :, i] for i in range(5))
+    lw = _decay(p, xw).reshape(B, S, H, D)
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype)).reshape(B, S, H, D)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(x.dtype)).reshape(B, S, H, D)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(x.dtype)).reshape(B, S, H, D)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(x.dtype)))
+    if mesh is not None:
+        from repro.dist.sharding import act_hint
+        r = act_hint(r, mesh, ("batch", None, "model", None))
+        k = act_hint(k, mesh, ("batch", None, "model", None))
+        v = act_hint(v, mesh, ("batch", None, "model", None))
+        lw = act_hint(lw, mesh, ("batch", None, "model", None))
+    u = p["u"].astype(jnp.float32).reshape(H, D)
+
+    if S == 1 or not use_chunked:
+        y, state = wkv_sequential(r, k, v, lw, u, state0)
+    else:
+        y, state = wkv_chunked(r, k, v, lw, u, state0, chunk=chunk)
+
+    y = group_norm(y.reshape(B, S, d), p["ln_x_scale"], p["ln_x_bias"], H)
+    y = (y.astype(x.dtype) * g)
+    out = jnp.einsum("bsd,de->bse", y, p["wo"].astype(x.dtype))
+    new_cache = {"shift": x[:, -1:], "state": state}
+    return out, new_cache
+
+
+def channel_mix_apply(cfg, p, x, cache=None):
+    """RWKV channel mixing.  cache: {"shift": (B,1,d)}."""
+    B, S, d = x.shape
+    prev = cache["shift"] if cache is not None else jnp.zeros((B, 1, d), x.dtype)
+    sx = _token_shift(x, prev) - x
+    xk = x + sx * p["mix_k"].astype(x.dtype)
+    xr = x + sx * p["mix_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(x.dtype))))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["wv"].astype(x.dtype))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype)))
+    return rr * vv, {"shift": x[:, -1:]}
+
+
+def rwkv_cache_specs(cfg, batch, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    H, D = d // cfg.rwkv_head_size, cfg.rwkv_head_size
+    return {
+        "tmix": {"shift": jax.ShapeDtypeStruct((batch, 1, d), dtype),
+                 "state": jax.ShapeDtypeStruct((batch, H, D, D), jnp.float32)},
+        "cmix": {"shift": jax.ShapeDtypeStruct((batch, 1, d), dtype)},
+    }

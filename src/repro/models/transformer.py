@@ -1,0 +1,429 @@
+"""Unified decoder-only LM driver for every assigned architecture.
+
+A model is a repeated ``layer_pattern`` (e.g. gemma3: 5x local + 1x global
+attention; recurrentgemma: rglru, rglru, local; rwkv6: rwkv).  The repeated
+groups are stacked and driven by ``jax.lax.scan`` so the lowered HLO stays
+O(pattern) instead of O(depth) — essential for fast multi-pod compiles of
+27-42B configs.  Trailing layers that do not fill a group run unscanned.
+
+Three entry points lower for the dry-run grid:
+    train_loss   — full-sequence teacher forcing, chunked vocab-sharded CE
+    prefill      — full-sequence, returns last-position logits + KV/state cache
+    decode_step  — single token with cache (decode_32k / long_500k cells)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import rwkv6 as RWKV
+from repro.models.layers import PSpec
+from repro.models.loopctl import scan_or_loop
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def block_pspecs(cfg, kind: str):
+    if kind in ("attn", "local"):
+        mlp = MOE.moe_pspecs(cfg) if cfg.moe else L.mlp_pspecs(cfg)
+        return {"norm1": L.norm_pspecs(cfg), "attn": L.attn_pspecs(cfg),
+                "norm2": L.norm_pspecs(cfg), "mlp": mlp}
+    if kind == "rglru":
+        return {"norm1": L.norm_pspecs(cfg), "rec": RG.rglru_pspecs(cfg),
+                "norm2": L.norm_pspecs(cfg), "mlp": L.mlp_pspecs(cfg)}
+    if kind == "rwkv":
+        return {"norm1": L.norm_pspecs(cfg), "tmix": RWKV.time_mix_pspecs(cfg),
+                "norm2": L.norm_pspecs(cfg), "cmix": L.mlp_pspecs(cfg)}
+    raise ValueError(kind)
+
+
+def _stack_pspecs(tree, n):
+    return jax.tree.map(
+        lambda s: PSpec((n,) + s.shape, (L.LAYER,) + s.axes, s.init, s.dtype),
+        tree, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def model_pspecs(cfg):
+    p: dict = {"embed": L.embed_pspecs(cfg),
+               "final_norm": L.norm_pspecs(cfg)}
+    if cfg.family == "rwkv6":
+        p["ln0"] = L.norm_pspecs(cfg)
+    p["blocks"] = [
+        _stack_pspecs(block_pspecs(cfg, kind), cfg.num_groups)
+        for kind in cfg.layer_pattern
+    ]
+    p["rem_blocks"] = [block_pspecs(cfg, kind) for kind in cfg.rem_layers]
+    return p
+
+
+def init_params(cfg, rng):
+    depth_scale = 1.0 / np.sqrt(2.0 * max(cfg.num_layers, 1))
+    return L.init_params(model_pspecs(cfg), rng, depth_scale)
+
+
+def abstract_params(cfg):
+    return L.param_shapes(model_pspecs(cfg))
+
+
+def param_logical_axes(cfg):
+    return L.param_axes(model_pspecs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _block_cache_specs(cfg, kind, batch, max_seq, dtype=jnp.bfloat16):
+    if kind in ("attn", "local"):
+        return L.attn_cache_specs(cfg, batch, max_seq, kind, dtype)
+    if kind == "rglru":
+        return RG.rglru_cache_specs(cfg, batch, dtype)
+    if kind == "rwkv":
+        return RWKV.rwkv_cache_specs(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def _stack_specs(tree, n):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+
+def cache_specs(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    return {
+        "groups": [
+            _stack_specs(_block_cache_specs(cfg, kind, batch, max_seq, dtype),
+                         cfg.num_groups)
+            for kind in cfg.layer_pattern
+        ],
+        "rem": [_block_cache_specs(cfg, kind, batch, max_seq, dtype)
+                for kind in cfg.rem_layers],
+    }
+
+
+def init_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, max_seq, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def block_apply(cfg, kind, p, x, qpos, *, cache=None, kv_len=None,
+                build_cache_len=None, moe_dense=False, mesh=None):
+    """Returns (x, new_cache, aux_losses)."""
+    from repro.dist.sharding import act_hint
+    def gather_seq(h):
+        # Megatron-SP boundary: blocks compute with full sequence + TP
+        # weights; the residual carry stays sequence-sharded.
+        return act_hint(h, mesh, ("batch", None, None))
+
+    aux = {"lb_loss": jnp.zeros((), jnp.float32),
+           "z_loss": jnp.zeros((), jnp.float32)}
+    if kind in ("attn", "local"):
+        h = gather_seq(L.apply_norm(cfg, p["norm1"], x))
+        a, new_cache = attn_with_cache(cfg, p["attn"], h, qpos, kind=kind,
+                                       cache=cache, kv_len=kv_len,
+                                       build_cache_len=build_cache_len,
+                                       mesh=mesh)
+        x = x + a
+        h = gather_seq(L.apply_norm(cfg, p["norm2"], x))
+        if cfg.moe:
+            if moe_dense:
+                m, aux = MOE.moe_apply_dense(cfg, p["mlp"], h)
+            elif mesh is not None and "model" in mesh.shape:
+                m, aux = MOE.moe_apply_sharded(cfg, p["mlp"], h, mesh)
+            else:
+                m, aux = MOE.moe_apply(cfg, p["mlp"], h)
+        else:
+            m = L.mlp_apply(cfg, p["mlp"], h, mesh=mesh)
+        x = x + m
+        return x, new_cache, aux
+    if kind == "rglru":
+        h = gather_seq(L.apply_norm(cfg, p["norm1"], x))
+        r, new_cache = RG.rglru_block_apply(cfg, p["rec"], h, cache=cache)
+        x = x + r
+        h = gather_seq(L.apply_norm(cfg, p["norm2"], x))
+        x = x + L.mlp_apply(cfg, p["mlp"], h, mesh=mesh)
+        return x, new_cache, aux
+    if kind == "rwkv":
+        h = gather_seq(L.apply_norm(cfg, p["norm1"], x))
+        t, tcache = RWKV.time_mix_apply(
+            cfg, p["tmix"], h, cache=cache["tmix"] if cache else None,
+            mesh=mesh)
+        x = x + t
+        h = gather_seq(L.apply_norm(cfg, p["norm2"], x))
+        c, ccache = RWKV.channel_mix_apply(
+            cfg, p["cmix"], h, cache=cache["cmix"] if cache else None)
+        x = x + c
+        return x, {"tmix": tcache, "cmix": ccache}, aux
+    raise ValueError(kind)
+
+
+def attn_with_cache(cfg, p, x, qpos, *, kind, cache, kv_len, build_cache_len,
+                    mesh=None):
+    """attn_apply + optional cache construction for prefill."""
+    if build_cache_len is None:
+        return L.attn_apply(cfg, p, x, qpos, kind=kind, cache=cache,
+                            kv_len=kv_len, mesh=mesh)
+    # prefill: run full-seq attention, then materialize the cache buffers
+    out, _ = L.attn_apply(cfg, p, x, qpos, kind=kind, cache=None, kv_len=None,
+                          mesh=mesh)
+    B, S, _ = x.shape
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        k = L.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.pos_emb == "rope":
+        base = cfg.rope_base
+        if kind == "attn" and cfg.rope_base_global:
+            base = cfg.rope_base_global
+        k = L.apply_rope(k, qpos, base=base, pct=cfg.rope_pct)
+    window = cfg.window_size if kind == "local" else 0
+    Sc = min(build_cache_len, window) if window else build_cache_len
+    new_cache = _materialize_cache(k, v, S, Sc, window)
+    return out, new_cache
+
+
+def _materialize_cache(k, v, S, Sc, window):
+    B, _, KH, D = k.shape
+    ck = jnp.zeros((B, Sc, KH, D), k.dtype)
+    cv = jnp.zeros((B, Sc, KH, D), v.dtype)
+    if window and S >= window and Sc == window:
+        idx = np.arange(S - window, S)
+        slots = np.mod(idx, window)
+        ck = ck.at[:, slots].set(k[:, S - window:])
+        cv = cv.at[:, slots].set(v[:, S - window:])
+    else:
+        n = min(S, Sc)
+        ck = ck.at[:, :n].set(k[:, :n])
+        cv = cv.at[:, :n].set(v[:, :n])
+    return {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def embed_input(cfg, params, batch, qpos, dtype=jnp.bfloat16):
+    if "frames" in batch:                       # stubbed modality frontend
+        x = batch["frames"].astype(dtype)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+    else:
+        x = L.embed_lookup(cfg, params["embed"], batch["tokens"], dtype)
+    if cfg.pos_emb == "sinusoidal":
+        x = x + L.sinusoidal_emb(qpos, cfg.d_model, dtype)[None]
+    if cfg.family == "rwkv6":
+        x = L.apply_norm(cfg, params["ln0"], x)
+    return x
+
+
+def _sum_aux(auxs):
+    return jax.tree.map(lambda a: jnp.sum(a), auxs)
+
+
+def forward_hidden(cfg, params, x, qpos, *, caches=None, kv_len=None,
+                   build_cache_len=None, moe_dense=False, remat="none",
+                   mesh=None):
+    """Run all layers.  Returns (hidden, new_caches, aux)."""
+    pattern = cfg.layer_pattern
+    mode_decode = caches is not None
+    mode_prefill = build_cache_len is not None
+
+    def _res_hint(h):
+        if mesh is None:
+            return h
+        from repro.dist.sharding import act_hint
+        if h.shape[1] > 1:      # full-seq: sequence-parallel residual
+            return act_hint(h, mesh, ("batch", "model", None))
+        return act_hint(h, mesh, ("batch", None, None))
+
+    def group_body(x, xs):
+        x = _res_hint(x)
+        if mode_decode:
+            bparams, bcaches = xs
+        else:
+            bparams, bcaches = xs, [None] * len(pattern)
+        new_caches, auxs = [], []
+        for i, kind in enumerate(pattern):
+            x, nc, aux = block_apply(cfg, kind, bparams[i], x, qpos,
+                                     cache=bcaches[i], kv_len=kv_len,
+                                     build_cache_len=build_cache_len,
+                                     moe_dense=moe_dense, mesh=mesh)
+            new_caches.append(nc)
+            auxs.append(aux)
+        aux = jax.tree.map(lambda *a: sum(a), *auxs)
+        x = _res_hint(x)
+        if mode_decode or mode_prefill:
+            return x, (new_caches, aux)
+        return x, aux
+
+    body = group_body
+    if remat == "full":
+        body = jax.checkpoint(group_body, prevent_cse=False,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        body = jax.checkpoint(group_body, prevent_cse=False,
+                              policy=jax.checkpoint_policies.checkpoint_dots)
+
+    xs = (params["blocks"], caches["groups"]) if mode_decode else params["blocks"]
+    x, ys = scan_or_loop(body, x, xs)
+    if mode_decode or mode_prefill:
+        group_caches, auxs = ys
+    else:
+        group_caches, auxs = None, ys
+    aux = _sum_aux(auxs)
+
+    # remainder layers (unscanned)
+    rem_caches = []
+    for i, kind in enumerate(cfg.rem_layers):
+        c_in = caches["rem"][i] if mode_decode else None
+        x, nc, a = block_apply(cfg, kind, params["rem_blocks"][i], x, qpos,
+                               cache=c_in, kv_len=kv_len,
+                               build_cache_len=build_cache_len,
+                               moe_dense=moe_dense, mesh=mesh)
+        rem_caches.append(nc)
+        aux = jax.tree.map(lambda s, v: s + v, aux, a)
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    new_caches = None
+    if mode_decode or mode_prefill:
+        new_caches = {"groups": group_caches, "rem": rem_caches}
+    return x, new_caches, aux
+
+
+def logits_fn(cfg, params, hidden):
+    head = L.head_matrix(cfg, params["embed"])
+    if cfg.num_codebooks > 1:
+        return jnp.einsum("bsd,kdv->bskv", hidden, head.astype(hidden.dtype))
+    return jnp.einsum("bsd,dv->bsv", hidden, head.astype(hidden.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Losses (chunked, vocab-sharded friendly)
+# ---------------------------------------------------------------------------
+
+def _ce_chunk(cfg, head, h, labels, mesh=None):
+    """h: (B,C,d); labels: (B,C) or (B,C,K).  Returns summed CE (f32)."""
+    from repro.dist.sharding import act_hint
+    if cfg.num_codebooks > 1:
+        logits = jnp.einsum("bcd,kdv->bckv", h, head.astype(h.dtype))
+        logits = act_hint(logits, mesh, ("batch", None, None, "model"))
+    else:
+        logits = jnp.einsum("bcd,dv->bcv", h, head.astype(h.dtype))
+        logits = act_hint(logits, mesh, ("batch", None, "model"))
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, cfg.vocab_size, dtype=jnp.float32)
+    ll = jnp.sum(logits * onehot, axis=-1)
+    return jnp.sum(lse - ll), jnp.sum(jnp.square(lse))
+
+
+def chunked_ce(cfg, params, hidden, labels, ce_chunk=512, mesh=None):
+    """Scan over sequence chunks so full (B,S,V) logits never materialize."""
+    from repro.models.loopctl import unroll_mode
+    if unroll_mode():
+        ce_chunk = max(ce_chunk, 2048)    # fewer unrolled bodies, same flops
+    B, S, d = hidden.shape
+    C = min(ce_chunk, S)
+    while S % C:
+        C -= 1
+    n = S // C
+    head = L.head_matrix(cfg, params["embed"])
+    hs = hidden.reshape(B, n, C, d).transpose(1, 0, 2, 3)
+    ls = (labels.reshape(B, n, C, -1).transpose(1, 0, 2, 3).squeeze(-1)
+          if labels.ndim == 2 else
+          labels.reshape(B, n, C, labels.shape[-1]).transpose(1, 0, 2, 3))
+
+    @functools.partial(jax.checkpoint, prevent_cse=False,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def step(carry, inp):
+        tot, zsq = carry
+        h, lab = inp
+        ce, z = _ce_chunk(cfg, head, h, lab, mesh=mesh)
+        return (tot + ce, zsq + z), None
+
+    (tot, zsq), _ = scan_or_loop(step, (jnp.zeros((), jnp.float32),) * 2,
+                                 (hs, ls))
+    denom = float(B * S * (cfg.num_codebooks if labels.ndim == 3 else 1))
+    return tot / denom, zsq / denom
+
+
+def train_loss(cfg, params, batch, *, moe_dense=False, remat="full",
+               ce_chunk=512, lb_coef=0.01, z_coef=1e-4, mesh=None):
+    """batch: {"tokens": (B,S+1)} or {"frames": (B,S,d), "labels": (B,S,K)}."""
+    if "frames" in batch:
+        inputs = {"frames": batch["frames"]}
+        labels = batch["labels"]
+        S = batch["frames"].shape[1]
+    else:
+        inputs = {"tokens": batch["tokens"][:, :-1]}
+        labels = batch["tokens"][:, 1:]
+        S = labels.shape[1]
+    if cfg.train_gather_bf16:
+        # pre-cast sharded params so FSDP gathers move bf16, not f32
+        params = dict(params, blocks=L.cast_tree(params["blocks"],
+                                                 jnp.bfloat16),
+                      rem_blocks=L.cast_tree(params["rem_blocks"],
+                                             jnp.bfloat16))
+    qpos = jnp.arange(S)
+    x = embed_input(cfg, params, inputs, qpos)
+    from repro.dist.sharding import act_hint
+    x = act_hint(x, mesh, ("batch", None, None))
+    hidden, _, aux = forward_hidden(cfg, params, x, qpos,
+                                    moe_dense=moe_dense, remat=remat,
+                                    mesh=mesh)
+    ce, z_ce = chunked_ce(cfg, params, hidden, labels, ce_chunk, mesh=mesh)
+    loss = ce + lb_coef * aux["lb_loss"] + z_coef * (aux["z_loss"] + z_ce)
+    metrics = {"loss": loss, "ce": ce, "lb_loss": aux["lb_loss"],
+               "z_loss": aux["z_loss"] + z_ce}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def prefill(cfg, params, batch, max_seq, *, moe_dense=False, mesh=None):
+    """Full-sequence forward building the cache.  Returns (last_logits, cache)."""
+    if "frames" in batch:
+        S = batch["frames"].shape[1]
+    else:
+        S = batch["tokens"].shape[1]
+    qpos = jnp.arange(S)
+    x = embed_input(cfg, params, batch, qpos)
+    hidden, caches, _ = forward_hidden(cfg, params, x, qpos,
+                                       build_cache_len=max_seq,
+                                       moe_dense=moe_dense, mesh=mesh)
+    logits = logits_fn(cfg, params, hidden[:, -1:])
+    return logits, caches
+
+
+def decode_step(cfg, params, caches, pos, batch, *, moe_dense=False,
+                mesh=None):
+    """One token.  pos: scalar int32 (0-based position of the new token).
+
+    batch: {"tokens": (B,1)} or {"frames": (B,1,d)}.
+    Returns (logits (B,1,[K,]V), new_caches).
+    """
+    qpos = pos[None] if jnp.ndim(pos) == 0 else pos
+    x = embed_input(cfg, params, batch, qpos)
+    hidden, caches, _ = forward_hidden(cfg, params, x, qpos, caches=caches,
+                                       kv_len=pos, moe_dense=moe_dense,
+                                       mesh=mesh)
+    return logits_fn(cfg, params, hidden), caches

@@ -1,0 +1,68 @@
+"""int8 gradient compression with error feedback.
+
+The paper's "trade spike payload for spike frequency" idea (Sec. II)
+applied to gradient traffic: gradients cross the ICI as int8 payloads +
+one f32 scale per tensor (4x fewer collective bytes than f32, 2x fewer
+than bf16), with the quantization residual fed back into the next step so
+the compression is unbiased over time (error-feedback SGD).
+
+``compressed_psum_mean`` is the drop-in for the gradient all-reduce: each
+device quantizes its local shard, all-gathers the int8 payloads over the
+batch axes inside a shard_map, and dequantizes + averages locally.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_tensor(g, bits: int = 8):
+    qmax = 2.0 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(g / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_tensor(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(grads, ef_state):
+    """Apply error feedback then quantize each leaf.
+
+    Returns (q_tree, scale_tree, new_ef_state)."""
+    if ef_state is None:
+        ef_state = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+    corrected = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
+                             grads, ef_state)
+    qs = jax.tree.map(quantize_tensor, corrected)
+    q_tree = jax.tree.map(lambda t: t[0], qs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    s_tree = jax.tree.map(lambda t: t[1], qs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(
+        lambda c, q, s: c - dequantize_tensor(q, s), corrected, q_tree, s_tree)
+    return q_tree, s_tree, new_ef
+
+
+def compressed_psum_mean(leaf, scale, mesh, axes=("data",)):
+    """All-reduce-mean one tensor's int8 payload over `axes`.
+
+    Implementation: all-gather int8 + per-shard scales inside shard_map,
+    dequantize, mean.  Link traffic = n/4 of the f32 all-gather."""
+    axes = tuple(a for a in axes if a in mesh.shape)
+    if not axes:
+        return dequantize_tensor(leaf, scale)
+    ax = axes if len(axes) > 1 else axes[0]
+
+    def local(q, s):
+        qg = jax.lax.all_gather(q, ax)          # (n, ...) int8
+        sg = jax.lax.all_gather(s, ax)          # (n,) f32
+        deq = qg.astype(jnp.float32) * sg.reshape(
+            (-1,) + (1,) * (qg.ndim - 1))
+        return jnp.mean(deq, axis=0)
+
+    return jax.shard_map(local, mesh=mesh, in_specs=(P(), P()),
+                         out_specs=P(), check_vma=False)(leaf, scale)

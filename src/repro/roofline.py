@@ -1,0 +1,165 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s_per_chip
+    memory term     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective term = collective_bytes_per_device / ICI_link_bw
+
+``cost_analysis()`` of a GSPMD-partitioned executable reports *per-device*
+flops/bytes (the module is the per-device program).  Collective bytes are
+not in cost_analysis: we parse the compiled HLO text and sum operand sizes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (+ their async -start forms), so the term is also
+per-device.  With the assignment's aggregate form
+``total_bytes / (chips x link_bw)`` this is identical because total =
+per_device x chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from dataclasses import dataclass, field
+
+from repro.configs.paper import TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+)
+
+# dtype[1,2,3]{layout}  (layout optional; scalars: dtype[])
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")(?:-start)?\(",
+)
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind from (partitioned) HLO text."""
+    out: dict = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        # all shapes on the line: first group = result tuple, rest = operands
+        result_part = m.group(1)
+        n_result = len(_SHAPE_RE.findall(result_part))
+        shapes = _SHAPE_RE.findall(line)
+        operands = shapes[n_result:] if len(shapes) > n_result else shapes
+        nbytes = sum(shape_bytes(dt, dims) for dt, dims in operands)
+        out[kind] += nbytes
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float                 # per device
+    bytes_accessed: float        # per device
+    collective_bytes: float      # per device
+    collectives: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float           # useful model flops per device per step
+    useful_ratio: float
+    memory_per_device: dict
+    note: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=1)
+
+
+def analyze(arch_name, shape_name, mesh_name, chips, flops, byts, coll,
+            model_flops_global, mem_stats, chip=TPU_V5E, note="") -> Roofline:
+    """flops/byts: per-device totals; coll: dict from parse_collective_bytes
+    (already trip-count-corrected by the caller's unrolled extrapolation)."""
+    compute_s = flops / chip.peak_flops_bf16
+    memory_s = byts / chip.hbm_bw
+    collective_s = coll["total"] / chip.ici_bw_per_link
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mflops_dev = model_flops_global / chips
+    return Roofline(
+        arch=arch_name, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops=flops, bytes_accessed=byts,
+        collective_bytes=float(coll["total"]),
+        collectives={k: v for k, v in coll.items() if v},
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant,
+        model_flops=mflops_dev,
+        useful_ratio=(mflops_dev / flops) if flops else 0.0,
+        memory_per_device=mem_stats, note=note,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful-model-FLOPs for the cell (global, per step).
+
+    train: 6 * N_active * tokens  (fwd+bwd)
+    prefill: 2 * N_active * tokens (+ attention KV term)
+    decode: 2 * N_active * batch  (+ attention score term over the cache)
+    """
+    n = cfg.active_param_count()
+    attn_flops_token = _attn_flops_per_token(cfg, shape)
+    if shape.kind == "train":
+        return (6.0 * n + 3.0 * attn_flops_token) * shape.tokens
+    if shape.kind == "prefill":
+        return (2.0 * n + attn_flops_token) * shape.tokens
+    # decode: one token per sequence
+    return (2.0 * n + _decode_attn_flops(cfg, shape)) * shape.global_batch
+
+
+def _attn_flops_per_token(cfg, shape) -> float:
+    """Forward attention-score+value FLOPs per token (avg over causal)."""
+    total = 0.0
+    S = shape.seq_len
+    for kind in cfg._all_layers():
+        if kind in ("attn", "local"):
+            ctx = min(S, cfg.window_size) if (kind == "local" and cfg.window_size) \
+                else S / 2.0
+            total += 2.0 * 2.0 * cfg.num_heads * cfg.head_dim * ctx
+        elif kind == "rwkv":
+            total += 2.0 * 2.0 * cfg.d_model * cfg.rwkv_head_size
+        elif kind == "rglru":
+            total += 8.0 * (cfg.lru_width or cfg.d_model)
+    return total
+
+
+def _decode_attn_flops(cfg, shape) -> float:
+    total = 0.0
+    S = shape.seq_len
+    for kind in cfg._all_layers():
+        if kind in ("attn", "local"):
+            ctx = min(S, cfg.window_size) if (kind == "local" and cfg.window_size) else S
+            total += 2.0 * 2.0 * cfg.num_heads * cfg.head_dim * ctx
+        elif kind == "rwkv":
+            total += 2.0 * 2.0 * cfg.d_model * cfg.rwkv_head_size
+        elif kind == "rglru":
+            total += 8.0 * (cfg.lru_width or cfg.d_model)
+    return total

@@ -1,0 +1,121 @@
+"""Batched serving engine with activity-driven scheduling.
+
+The spike-FIFO -> performance-level loop of the paper (core/dvfs.py),
+applied to inference: the request queue's depth selects the decode batch
+width each scheduling round (``QueueDVFS``), so machine activity tracks
+offered load — idle deployments run narrow/cheap, bursts widen the batch.
+
+Continuous-batching-lite: one padded decode batch; finished sequences are
+replaced from the queue between rounds.  Energy per token is estimated via
+``TPUEnergyModel`` from the decode step's roofline terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dvfs import QueueDVFS
+from repro.core.energy import TPUEnergyModel
+from repro.models import transformer as T
+
+
+def sample_logits(logits, key, *, temperature: float = 0.0, top_k: int = 0):
+    """logits: (B, V).  temperature<=0 -> greedy; top_k>0 restricts support."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        kth = jnp.sort(lg, axis=-1)[:, -top_k][:, None]
+        lg = jnp.where(lg < kth, -1e30, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 32
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, max_seq: int = 256,
+                 dvfs: QueueDVFS | None = None, eos_id: int | None = None,
+                 greedy: bool = True, temperature: float = 0.0,
+                 top_k: int = 0, seed: int = 0, mesh=None):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.dvfs = dvfs or QueueDVFS(thresholds=(2, 6),
+                                      batch_levels=(1, 4, 8))
+        self.eos_id = eos_id
+        self.greedy = greedy
+        self.temperature = temperature
+        self.top_k = top_k
+        self._key = jax.random.PRNGKey(seed)
+        self.mesh = mesh
+        self.energy = TPUEnergyModel()
+        self.queue: list[Request] = []
+        self.stats = {"tokens": 0, "rounds": 0, "batch_hist": []}
+
+        self._prefill = jax.jit(
+            lambda p, b: T.prefill(cfg, p, b, max_seq),
+            static_argnames=())
+        self._decode = jax.jit(
+            lambda p, c, pos, b: T.decode_step(cfg, p, c, pos, b))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _sample(self, logits):
+        lg = logits[:, -1]
+        if lg.ndim == 3:                      # multi-codebook: first head
+            lg = lg[:, 0]
+        if self.greedy or self.temperature <= 0.0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        return sample_logits(lg, sub, temperature=self.temperature,
+                             top_k=self.top_k)
+
+    def _run_batch(self, reqs: list[Request]):
+        """Prefill a batch of same-length prompts, then decode to completion."""
+        B = len(reqs)
+        S = max(len(r.prompt) for r in reqs)
+        prompts = np.full((B, S), 0, np.int32)
+        for i, r in enumerate(reqs):
+            prompts[i, S - len(r.prompt):] = r.prompt       # left-pad
+        logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
+        tok = self._sample(logits)
+        max_new = max(r.max_new_tokens for r in reqs)
+        for i, r in enumerate(reqs):
+            r.out_tokens.append(int(tok[i]))
+        for step in range(1, max_new):
+            pos = jnp.int32(S + step - 1)
+            logits, caches = self._decode(self.params, caches, pos,
+                                          {"tokens": tok[:, None]})
+            tok = self._sample(logits)
+            for i, r in enumerate(reqs):
+                if len(r.out_tokens) < r.max_new_tokens and not r.done:
+                    t = int(tok[i])
+                    r.out_tokens.append(t)
+                    if self.eos_id is not None and t == self.eos_id:
+                        r.done = True
+            self.stats["tokens"] += B
+        for r in reqs:
+            r.done = True
+
+    def run(self):
+        """Drain the queue with DVFS-selected batch widths."""
+        while self.queue:
+            width = self.dvfs.batch_size(len(self.queue))
+            batch = self.queue[:width]
+            self.queue = self.queue[width:]
+            self.stats["rounds"] += 1
+            self.stats["batch_hist"].append(len(batch))
+            self._run_batch(batch)
+        return self.stats

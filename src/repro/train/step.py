@@ -1,0 +1,83 @@
+"""Train / serve step factories.
+
+These are the functions the dry-run lowers against the production mesh and
+the trainer executes on real hardware.  Microbatching (gradient
+accumulation) runs as a ``lax.scan`` over microbatch slices with a single
+optimizer application — collective traffic for the gradient all-reduce is
+paid once per step regardless of the microbatch count (compute/comm overlap
+is then XLA latency-hiding's job; see DESIGN.md section 5).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.loopctl import scan_or_loop
+from repro.optim import AdamWConfig, adamw_update, cosine_schedule
+
+
+def make_train_step(cfg, *, opt=AdamWConfig(), microbatch: int = 1,
+                    remat: str = "full", moe_dense: bool = False,
+                    ce_chunk: int = 512, total_steps: int = 10_000,
+                    warmup_steps: int = 100, mesh=None):
+    """Returns train_step(params, opt_state, batch, step) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        return T.train_loss(cfg, params, batch, moe_dense=moe_dense,
+                            remat=remat, ce_chunk=ce_chunk, mesh=mesh)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def grads_of(params, batch):
+        if microbatch <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+        # split batch leading dim into microbatches and accumulate
+        def slice_mb(x):
+            B = x.shape[0]
+            return x.reshape(microbatch, B // microbatch, *x.shape[1:])
+        mbs = jax.tree.map(slice_mb, batch)
+
+        def body(carry, mb):
+            acc, msum = carry
+            (loss, metrics), grads = grad_fn(params, mb)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            msum = jax.tree.map(jnp.add, msum, metrics)
+            return (acc, msum), None
+
+        zero_g = jax.tree.map(jnp.zeros_like, params)
+        zero_m = {"loss": 0.0, "ce": 0.0, "lb_loss": 0.0, "z_loss": 0.0}
+        zero_m = jax.tree.map(jnp.float32, zero_m)
+        (grads, msum), _ = scan_or_loop(body, (zero_g, zero_m), mbs)
+        grads = jax.tree.map(lambda g: g / microbatch, grads)
+        metrics = jax.tree.map(lambda m: m / microbatch, msum)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch, step):
+        grads, metrics = grads_of(params, batch)
+        lr = cosine_schedule(step, peak_lr=opt.lr, warmup_steps=warmup_steps,
+                             total_steps=total_steps)
+        params, opt_state, om = adamw_update(grads, opt_state, params, opt, lr=lr)
+        metrics.update(om)
+        metrics["lr"] = lr
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, max_seq: int, *, moe_dense: bool = False,
+                      mesh=None):
+    def prefill_step(params, batch):
+        return T.prefill(cfg, params, batch, max_seq, moe_dense=moe_dense,
+                         mesh=mesh)
+    return prefill_step
+
+
+def make_decode_step(cfg, *, moe_dense: bool = False, mesh=None):
+    def decode_step(params, caches, pos, batch):
+        return T.decode_step(cfg, params, caches, pos, batch,
+                             moe_dense=moe_dense, mesh=mesh)
+    return decode_step

@@ -1,0 +1,17 @@
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import HealthCheck, settings
+    settings.register_profile(
+        "repro", deadline=None, max_examples=25,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large])
+    settings.load_profile("repro")
+except ImportError:
+    pass
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,96 @@
+"""Data pipeline determinism/seekability + gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.data.pipeline import PipelineConfig, SyntheticTokenPipeline
+from repro.optim.compress import (
+    compressed_psum_mean, dequantize_tensor, ef_compress, quantize_tensor,
+)
+
+
+def _pipe(seed=0):
+    return SyntheticTokenPipeline(PipelineConfig(
+        vocab_size=101, seq_len=32, global_batch=4, seed=seed))
+
+
+def test_batches_deterministic_and_seekable():
+    p1, p2 = _pipe(), _pipe()
+    for s in (0, 7, 3, 7):          # out-of-order seek
+        a, b = p1.batch(s), p2.batch(s)
+        assert bool(jnp.all(a["tokens"] == b["tokens"]))
+    assert not bool(jnp.all(p1.batch(1)["tokens"] == p1.batch(2)["tokens"]))
+
+
+def test_tokens_have_learnable_structure():
+    """Most transitions follow the affine recurrence (noise_prob ~5%)."""
+    cfg = PipelineConfig(vocab_size=101, seq_len=64, global_batch=8,
+                         noise_prob=0.05)
+    b = SyntheticTokenPipeline(cfg).batch(0)["tokens"]
+    x = np.asarray(b)
+    consistent = 0
+    total = 0
+    for row in x:
+        # recover (a, c) from the first clean transitions by brute force
+        for a in range(1, 101, 2):
+            c = (row[1] - a * row[0]) % 101
+            pred = (a * row[:-1] + c) % 101
+            frac = (pred == row[1:]).mean()
+            if frac > 0.5:
+                consistent += (pred == row[1:]).sum()
+                total += len(pred)
+                break
+    assert total > 0 and consistent / total > 0.8
+
+
+def test_frames_mode_shapes():
+    cfg = PipelineConfig(vocab_size=17, seq_len=8, global_batch=2,
+                         kind="frames", d_model=16, num_codebooks=4)
+    b = SyntheticTokenPipeline(cfg).batch(0)
+    assert b["frames"].shape == (2, 8, 16)
+    assert b["labels"].shape == (2, 8, 4)
+
+
+@given(seed=st.integers(0, 1000))
+def test_quantize_roundtrip_bounded(seed):
+    r = np.random.default_rng(seed)
+    g = jnp.asarray(r.standard_normal((64,)) * r.uniform(0.01, 10), jnp.float32)
+    q, s = quantize_tensor(g)
+    err = jnp.abs(dequantize_tensor(q, s) - g)
+    assert float(jnp.max(err)) <= float(s) * 0.5 + 1e-9
+
+
+def test_error_feedback_unbiased_over_time():
+    """Sum of EF-compressed gradients converges to the sum of true ones."""
+    r = np.random.default_rng(0)
+    true_sum = np.zeros(32, np.float32)
+    sent_sum = np.zeros(32, np.float32)
+    ef = None
+    for t in range(200):
+        g = {"w": jnp.asarray(r.standard_normal(32), jnp.float32)}
+        q, s, ef = ef_compress(g, ef)
+        sent = dequantize_tensor(q["w"], s["w"])
+        true_sum += np.asarray(g["w"])
+        sent_sum += np.asarray(sent)
+    resid = np.abs(true_sum - sent_sum).max()
+    # residual equals the current EF buffer -> O(one quantization step)
+    assert resid < 0.05, resid
+
+
+def test_compressed_psum_on_trivial_mesh():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    g = jnp.asarray(np.random.default_rng(1).standard_normal((16, 8)),
+                    jnp.float32)
+    q, s = quantize_tensor(g)
+    out = compressed_psum_mean(q, s, mesh, axes=("data",))
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(dequantize_tensor(q, s)), rtol=1e-6)
+
+
+def test_compression_ratio():
+    """int8 + one f32 scale: 4x fewer collective payload bytes than f32."""
+    g = jnp.zeros((1024,), jnp.float32)
+    q, s = quantize_tensor(g)
+    assert (q.size * q.dtype.itemsize + 4) * 4 <= g.size * 4 + 16

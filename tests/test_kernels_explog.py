@@ -1,0 +1,63 @@
+"""Fixed-point exp/log accelerator kernels: bit-exactness, accuracy,
+monotonicity, algebraic properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.kernels.explog import (
+    FX_ONE, fx_exp, fx_exp_ref, fx_log, fx_log_ref,
+)
+from repro.kernels.explog.ops import from_fx, to_fx
+
+
+def test_exp_bit_exact(rng):
+    x = to_fx(rng.uniform(-12, 10.5, 8192))
+    assert bool(jnp.all(fx_exp(x) == fx_exp_ref(x)))
+
+
+def test_log_bit_exact(rng):
+    x = to_fx(rng.uniform(1e-3, 6e4, 8192))
+    assert bool(jnp.all(fx_log(x) == fx_log_ref(x)))
+
+
+def test_exp_accuracy(rng):
+    xf = rng.uniform(-10, 10, 4096)
+    out = from_fx(fx_exp(to_fx(xf)))
+    e = np.exp(xf)
+    assert np.all(np.abs(out - e) <= 2 / FX_ONE + e * 2.0**-11)
+
+
+def test_log_accuracy(rng):
+    xf = rng.uniform(1e-2, 6e4, 4096)
+    out = from_fx(fx_log(to_fx(xf)))
+    assert np.max(np.abs(out - np.log(np.round(xf * FX_ONE) / FX_ONE))) < 3e-4
+
+
+def test_exp_monotone():
+    xs = to_fx(np.linspace(-6, 6, 4001))
+    ys = np.asarray(fx_exp(xs))
+    assert np.all(np.diff(ys) >= 0)
+
+
+def test_log_negative_flagged():
+    x = jnp.asarray([-5, 0, 1, FX_ONE], jnp.int32)
+    out = np.asarray(fx_log(x))
+    assert out[0] < -(2**29) and out[1] < -(2**29)
+    assert abs(out[3]) <= 1          # ln(1) = 0
+
+
+@given(a=st.floats(-4, 4), b=st.floats(-4, 4))
+def test_exp_add_property(a, b):
+    """exp(a+b) ~ exp(a)exp(b) within fixed-point tolerance."""
+    ea = float(from_fx(fx_exp(to_fx(np.float32(a))[None]))[0])
+    eb = float(from_fx(fx_exp(to_fx(np.float32(b))[None]))[0])
+    eab = float(from_fx(fx_exp(to_fx(np.float32(a + b))[None]))[0])
+    ref = np.exp(a + b)
+    assert abs(eab - ea * eb) <= 0.01 * max(ref, 1.0) + 4 / FX_ONE
+
+
+@given(x=st.floats(0.01, 1000.0))
+def test_log_exp_roundtrip(x):
+    lx = fx_log(to_fx(np.float32(x))[None])
+    back = float(from_fx(fx_exp(lx))[0])
+    assert abs(back - x) <= 0.01 * x + 4 / FX_ONE

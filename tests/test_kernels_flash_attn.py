@@ -1,0 +1,49 @@
+"""Fused Pallas flash-attention kernel vs oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn import flash_attention_kernel, flash_attention_ref
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("shape", [(2, 64, 2, 16), (1, 128, 4, 32),
+                                   (1, 256, 1, 8)])
+def test_matches_ref(shape, causal, rng):
+    B, S, H, D = shape
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    out = flash_attention_kernel(q, k, v, causal=causal, bq=32, bk=32)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    ref = flash_attention_ref(fold(q), fold(k), fold(v), causal=causal)
+    ref = ref.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_bf16_io(rng):
+    B, S, H, D = 1, 64, 2, 16
+    mk = lambda: jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.bfloat16)
+    q, k, v = mk(), mk(), mk()
+    out = flash_attention_kernel(q, k, v, bq=32, bk=32)
+    assert out.dtype == jnp.bfloat16
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    ref = flash_attention_ref(fold(q).astype(jnp.float32),
+                              fold(k).astype(jnp.float32),
+                              fold(v).astype(jnp.float32))
+    ref = ref.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref), atol=0.03, rtol=0.03)
+
+
+def test_block_shape_sweep(rng):
+    B, S, H, D = 1, 128, 1, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    outs = [flash_attention_kernel(q, k, v, bq=bq, bk=bk)
+            for bq, bk in ((16, 16), (32, 64), (128, 32), (128, 128))]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   atol=2e-5, rtol=1e-4)

@@ -1,0 +1,61 @@
+"""LIF kernel: bit-exact vs oracle + neuron behavior properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.kernels.explog.ops import to_fx
+from repro.kernels.lif import fx_mul, lif_params_fx, lif_step, lif_step_ref
+
+P = lif_params_fx(tau_ms=10.0, v_th=1.0, v_reset=0.0, ref_ticks=2)
+
+
+def test_bit_exact(rng):
+    N = 5000
+    v = jnp.asarray(rng.integers(-(2**16), 2**16, N), jnp.int32)
+    rc = jnp.asarray(rng.integers(0, 4, N), jnp.int32)
+    i = jnp.asarray(rng.integers(-(2**13), 2**13, N), jnp.int32)
+    out_k = lif_step(v, rc, i, **P)
+    out_r = lif_step_ref(v, rc, i, **P)
+    for a, b in zip(out_k, out_r):
+        assert bool(jnp.all(a == b))
+
+
+def test_decay_toward_zero():
+    v = jnp.full((4,), to_fx(0.5), jnp.int32)
+    rc = jnp.zeros((4,), jnp.int32)
+    for _ in range(50):
+        v, rc, _ = lif_step(v, rc, jnp.zeros_like(v), **P)
+    assert np.all(np.abs(np.asarray(v)) < to_fx(0.01))
+
+
+def test_spike_and_refractory():
+    v = jnp.zeros((1,), jnp.int32)
+    rc = jnp.zeros((1,), jnp.int32)
+    big = jnp.full((1,), to_fx(2.0), jnp.int32)
+    v, rc, s = lif_step(v, rc, big, **P)
+    assert int(s[0]) == 1 and int(v[0]) == P["v_reset"]
+    # refractory: immediate re-drive must not spike
+    v, rc, s = lif_step(v, rc, big, **P)
+    assert int(s[0]) == 0
+    v, rc, s = lif_step(v, rc, big, **P)
+    assert int(s[0]) == 0
+    v, rc, s = lif_step(v, rc, big, **P)
+    assert int(s[0]) == 1          # refractory (2 ticks) elapsed
+
+
+@given(v=st.integers(-(2**17), 2**17), a=st.integers(0, 2**15))
+def test_fx_mul_matches_float(v, a):
+    got = int(fx_mul(jnp.int32(v), jnp.int32(a)))
+    exact = v * a / 2**15
+    assert abs(got - exact) <= 2.0
+
+
+@given(seed=st.integers(0, 10_000))
+def test_property_kernel_equals_ref(seed):
+    r = np.random.default_rng(seed)
+    n = int(r.integers(1, 300))
+    v = jnp.asarray(r.integers(-(2**16), 2**16, n), jnp.int32)
+    rc = jnp.asarray(r.integers(0, 3, n), jnp.int32)
+    i = jnp.asarray(r.integers(-(2**14), 2**14, n), jnp.int32)
+    for a, b in zip(lif_step(v, rc, i, **P), lif_step_ref(v, rc, i, **P)):
+        assert bool(jnp.all(a == b))

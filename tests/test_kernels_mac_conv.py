@@ -1,0 +1,47 @@
+"""MAC conv2d (CONV fetch mode) vs oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.kernels.mac_conv import mac_conv2d, mac_conv2d_ref
+
+CASES = [
+    ((1, 8, 8, 16), (3, 3, 16, 32), (1, 1), "VALID"),
+    ((2, 16, 16, 8), (3, 3, 8, 64), (1, 1), "SAME"),
+    ((1, 28, 28, 1), (5, 5, 1, 6), (1, 1), "VALID"),       # LeNet C1
+    ((1, 14, 14, 64), (1, 1, 64, 128), (1, 1), "VALID"),   # 1x1 bottleneck
+    ((1, 16, 16, 16), (3, 3, 16, 32), (2, 2), "SAME"),     # strided
+    ((1, 32, 32, 3), (3, 3, 3, 130), (1, 1), "SAME"),      # Cout padding
+    ((1, 7, 9, 4), (2, 4, 4, 8), (1, 2), "VALID"),         # odd everything
+]
+
+
+@pytest.mark.parametrize("xs,ws,stride,pad", CASES)
+def test_exact_vs_ref(xs, ws, stride, pad, rng):
+    x = jnp.asarray(rng.integers(-128, 127, xs), np.int8)
+    w = jnp.asarray(rng.integers(-128, 127, ws), np.int8)
+    out = mac_conv2d(x, w, stride=stride, padding=pad)
+    ref = mac_conv2d_ref(x, w, stride=stride, padding=pad)
+    assert out.shape == ref.shape
+    assert bool(jnp.all(out == ref))
+
+
+@pytest.mark.parametrize("dtype", [np.int8, np.uint8])
+def test_dtypes(dtype, rng):
+    lo, hi = (-128, 127) if dtype == np.int8 else (0, 255)
+    x = jnp.asarray(rng.integers(lo, hi, (1, 10, 10, 8)), dtype)
+    w = jnp.asarray(rng.integers(lo, hi, (3, 3, 8, 16)), dtype)
+    assert bool(jnp.all(mac_conv2d(x, w) == mac_conv2d_ref(x, w)))
+
+
+@given(h=st.integers(4, 12), w=st.integers(4, 12), cin=st.integers(1, 8),
+       cout=st.integers(1, 12), kh=st.integers(1, 3), kw=st.integers(1, 3),
+       seed=st.integers(0, 1000))
+def test_property_exact(h, w, cin, cout, kh, kw, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.integers(-128, 127, (1, h, w, cin)), np.int8)
+    wt = jnp.asarray(r.integers(-128, 127, (kh, kw, cin, cout)), np.int8)
+    out = mac_conv2d(x, wt, padding="SAME")
+    ref = mac_conv2d_ref(x, wt, padding="SAME")
+    assert bool(jnp.all(out == ref))

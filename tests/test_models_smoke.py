@@ -1,0 +1,84 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+output shapes + finiteness.  Exercises every assigned architecture family.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import registry as R
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init
+from repro.train.step import make_train_step
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED)
+def test_forward_and_train_step(arch, key):
+    cfg = configs.get_arch(arch).smoke()
+    params = T.init_params(cfg, key)
+    batch = R.make_dummy_batch(cfg, "train", 2, 32)
+    loss, metrics = T.train_loss(cfg, params, batch, moe_dense=True,
+                                 remat="none", ce_chunk=16)
+    assert jnp.isfinite(loss), arch
+    assert metrics["ce"].shape == ()
+
+    step = make_train_step(cfg, opt=AdamWConfig(lr=1e-3), moe_dense=True,
+                           ce_chunk=16)
+    opt = adamw_init(params)
+    p2, o2, m2 = step(params, opt, batch, jnp.int32(0))
+    assert jnp.isfinite(m2["loss"]) and jnp.isfinite(m2["grad_norm"])
+    # params actually moved
+    moved = jax.tree.leaves(jax.tree.map(
+        lambda a, b: jnp.any(a != b), params, p2))
+    assert any(bool(x) for x in moved), arch
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED)
+def test_prefill_logits_shape(arch, key):
+    cfg = configs.get_arch(arch).smoke()
+    params = T.init_params(cfg, key)
+    params = jax.tree.map(
+        lambda x: x.astype(jnp.bfloat16)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+    batch = R.make_dummy_batch(cfg, "prefill", 2, 16)
+    logits, caches = T.prefill(cfg, params, batch, 32, moe_dense=True)
+    if cfg.num_codebooks > 1:
+        assert logits.shape == (2, 1, cfg.num_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (2, 1, cfg.vocab_size)
+    assert jnp.all(jnp.isfinite(logits.astype(jnp.float32)))
+    assert caches is not None
+
+
+@pytest.mark.parametrize("arch", ["phi3.5-moe-42b-a6.6b", "gemma3-27b",
+                                  "rwkv6-1.6b", "recurrentgemma-2b"])
+def test_param_count_matches_analytic(arch, key):
+    """Analytic count tracks actual params (small bias/LoRA terms aside)."""
+    cfg = configs.get_arch(arch).smoke()
+    params = T.init_params(cfg, key)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    assert abs(n - cfg.param_count()) / n < 0.03, (arch, n, cfg.param_count())
+
+
+def test_full_configs_match_published_sizes():
+    expect = {
+        "phi3.5-moe-42b-a6.6b": (41.9e9, 6.6e9),
+        "olmoe-1b-7b": (6.9e9, 1.3e9),
+        "gemma3-27b": (27.0e9, 27.0e9),
+        "glm4-9b": (9.4e9, 9.4e9),
+        "nemotron-4-15b": (15.6e9, 15.6e9),
+        "qwen1.5-4b": (4.0e9, 4.0e9),
+        "chameleon-34b": (34.3e9, 34.3e9),
+        "rwkv6-1.6b": (1.6e9, 1.6e9),
+        "musicgen-large": (2.4e9, 2.4e9),
+        "recurrentgemma-2b": (2.9e9, 2.9e9),
+    }
+    for name, (total, active) in expect.items():
+        cfg = configs.get_arch(name)
+        assert abs(cfg.param_count() - total) / total < 0.05, name
+        assert abs(cfg.active_param_count() - active) / active < 0.07, name

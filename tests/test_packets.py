@@ -1,0 +1,66 @@
+"""SpiNNaker packet format + TCAM routing (paper Fig. 4-6)."""
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core.packets import (
+    FLIT_BITS, Packet, PacketType, TcamTable, pack, population_key, unpack,
+)
+from repro.core.router import RoutingTable
+
+
+@given(ptype=st.sampled_from(list(PacketType)),
+       key=st.integers(0, 2**32 - 1),
+       pbits=st.sampled_from([0, 32, 128]),
+       em=st.booleans(), ts=st.integers(0, 3),
+       payload_seed=st.integers(0, 2**32 - 1))
+def test_pack_unpack_roundtrip(ptype, key, pbits, em, ts, payload_seed):
+    payload = payload_seed % (1 << max(pbits, 1))
+    p = Packet(ptype, key, payload, pbits, em, ts)
+    w = pack(p)
+    assert w < (1 << FLIT_BITS)
+    assert unpack(w) == p
+
+
+def test_header_only_spike_is_compact():
+    """A multicast spike (no payload) fits the 64-bit header+key budget."""
+    w = pack(Packet(PacketType.MULTICAST, population_key(3, 2, 1, 0)))
+    assert w < (1 << 64)
+
+
+def test_tcam_first_match_priority():
+    t = TcamTable.empty(4)
+    t = t.add(0x1000, 0xF000, [0])        # broad entry
+    t = t.add(0x1200, 0xFF00, [1, 2])     # narrower, added later
+    assert list(np.nonzero(t.route(0x1234))[0]) == [0]   # first match wins
+    assert t.route(0x9999) is None
+
+
+def test_tcam_batch_equals_scalar(rng):
+    t = TcamTable.empty(3)
+    t = t.add(0x0100, 0xFF00, [0])
+    t = t.add(0x0200, 0xFF00, [1, 2])
+    keys = rng.integers(0, 0x400, 200).astype(np.uint32)
+    batch = t.route_batch(keys)
+    for i, k in enumerate(keys):
+        r = t.route(int(k))
+        expect = np.zeros(3, bool) if r is None else r
+        assert np.array_equal(batch[i], expect)
+
+
+def test_tcam_bist():
+    good = TcamTable.empty(2).add(0x0100, 0xFF00, [0])
+    assert good.self_test()
+    bad = TcamTable.empty(2).add(0x0123, 0xFF00, [0])   # key bits outside mask
+    assert not bad.self_test()
+
+
+def test_tcam_matches_dense_routing_table():
+    """The SNN engine's dense delivery matrix is the 1-hot special case."""
+    n = 6
+    ring = RoutingTable.ring(n)
+    t = TcamTable.empty(n)
+    for src in range(n):
+        t = t.add(src << 8, 0xFF00, [(src + 1) % n])
+    keys = np.asarray([s << 8 for s in range(n)], np.uint32)
+    batch = t.route_batch(keys)
+    assert np.array_equal(batch, ring.masks)

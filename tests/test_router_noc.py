@@ -1,0 +1,63 @@
+"""NoC / router model properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core.noc import NocModel, hops, multicast_links, xy_route
+from repro.core.router import RoutingTable, multicast_exchange, ring_exchange
+
+coord = st.tuples(st.integers(0, 7), st.integers(0, 7))
+
+
+@given(src=coord, dst=coord)
+def test_xy_route_length_is_manhattan(src, dst):
+    assert len(xy_route(src, dst)) == hops(src, dst)
+
+
+@given(src=coord, dsts=st.lists(coord, min_size=1, max_size=6, unique=True))
+def test_multicast_tree_never_worse_than_unicast(src, dsts):
+    tree = multicast_links(src, dsts)
+    uni = sum(hops(src, d) for d in dsts)
+    assert tree <= uni
+    assert tree >= max(hops(src, d) for d in dsts)
+
+
+def test_multicast_sharing_on_common_prefix():
+    # two destinations in the same row share the X leg
+    src, d1, d2 = (0, 0), (3, 1), (3, 2)
+    assert multicast_links(src, [d1, d2]) < hops(src, d1) + hops(src, d2)
+
+
+def test_packet_latency_matches_spec():
+    m = NocModel()
+    # 3 hops x 5 cycles @ 400 MHz
+    np.testing.assert_allclose(m.packet_latency_s((0, 0), (2, 1)),
+                               3 * 5 / 400e6)
+
+
+def test_collective_link_bytes_formulas():
+    m = NocModel()
+    assert m.collective_link_bytes("all-reduce", 100, 4) == 150.0
+    assert m.collective_link_bytes("all-gather", 100, 4) == 75.0
+    assert m.collective_link_bytes("collective-permute", 100, 4) == 100.0
+
+
+def test_ring_exchange_local():
+    s = jnp.arange(12).reshape(4, 3)
+    out = ring_exchange(s)
+    assert bool(jnp.all(out[1] == s[0])) and bool(jnp.all(out[0] == s[3]))
+
+
+def test_multicast_exchange_dense():
+    spk = jnp.asarray(np.random.default_rng(0).integers(0, 2, (4, 5)),
+                      jnp.int32)
+    arr = multicast_exchange(spk, RoutingTable.ring(4))
+    # PE 1 hears exactly PE 0's spikes; nothing else
+    assert bool(jnp.all(arr[1, 0] == spk[0]))
+    mask = jnp.ones(4, bool).at[0].set(False)
+    assert bool(jnp.all(arr[1][mask] == 0))
+
+
+def test_routing_table_fanout():
+    t = RoutingTable.ring(8)
+    assert np.all(t.fan_out() == 1)

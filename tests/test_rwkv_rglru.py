@@ -1,0 +1,103 @@
+"""Recurrent-family numerics: chunked WKV6 vs sequential oracle; chunked
+RG-LRU vs naive python recurrence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.models.rglru import _gates, rg_lru
+from repro.models.rwkv6 import wkv_chunked, wkv_sequential
+
+
+def _wkv_inputs(seed, B=2, S=96, H=2, D=8, decay_lo=-6.0, decay_hi=2.0):
+    r = np.random.default_rng(seed)
+    mk = lambda: jnp.asarray(r.standard_normal((B, S, H, D)), jnp.float32)
+    rr, k, v = mk(), mk(), mk()
+    lw = jnp.asarray(-np.exp(r.uniform(decay_lo, decay_hi, (B, S, H, D))),
+                     jnp.float32)
+    u = jnp.asarray(r.standard_normal((H, D)), jnp.float32)
+    s0 = jnp.asarray(r.standard_normal((B, H, D, D)), jnp.float32)
+    return rr, k, v, lw, u, s0
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 48])
+def test_wkv_chunked_equals_sequential(chunk):
+    rr, k, v, lw, u, s0 = _wkv_inputs(0)
+    y1, f1 = wkv_sequential(rr, k, v, lw, u, s0)
+    y2, f2 = wkv_chunked(rr, k, v, lw, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=3e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2),
+                               atol=3e-4, rtol=1e-4)
+
+
+@given(seed=st.integers(0, 3000),
+       decay=st.sampled_from([(-8.0, 3.0), (-2.0, 0.0), (-10.0, -5.0)]))
+def test_wkv_property_extreme_decays(seed, decay):
+    """Log-space chunking must stay exact for arbitrary data-dependent
+    decays — the naive factored GLA form overflows here."""
+    rr, k, v, lw, u, s0 = _wkv_inputs(seed, B=1, S=64, H=1, D=4,
+                                      decay_lo=decay[0], decay_hi=decay[1])
+    y1, f1 = wkv_sequential(rr, k, v, lw, u, s0)
+    y2, f2 = wkv_chunked(rr, k, v, lw, u, s0, chunk=16)
+    assert bool(jnp.all(jnp.isfinite(y2)))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=5e-4, rtol=5e-4)
+
+
+def _rglru_params(seed, w):
+    r = np.random.default_rng(seed)
+    return {
+        "wi": jnp.asarray(0.3 * r.standard_normal((w, w)), jnp.float32),
+        "bi": jnp.asarray(0.1 * r.standard_normal(w), jnp.float32),
+        "wa": jnp.asarray(0.3 * r.standard_normal((w, w)), jnp.float32),
+        "ba": jnp.asarray(0.1 * r.standard_normal(w), jnp.float32),
+        "lam": jnp.asarray(np.abs(r.standard_normal(w)) + 0.3, jnp.float32),
+    }
+
+
+@pytest.mark.parametrize("chunk", [8, 32, 1024])
+def test_rglru_matches_naive(chunk):
+    B, S, w = 2, 48, 8
+    r = np.random.default_rng(0)
+    p = _rglru_params(1, w)
+    u = jnp.asarray(r.standard_normal((B, S, w)), jnp.float32)
+    h0 = jnp.asarray(r.standard_normal((B, w)), jnp.float32)
+    y, hf = rg_lru(p, u, h0, chunk=chunk)
+    # naive python recurrence
+    a, b = _gates(p, u)
+    h = np.asarray(h0)
+    ys = []
+    for t in range(S):
+        h = np.asarray(a[:, t]) * h + np.asarray(b[:, t])
+        ys.append(h.copy())
+    ref = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y), ref, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(hf), ref[:, -1], atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_decode_continues_sequence():
+    B, S, w = 1, 16, 8
+    r = np.random.default_rng(3)
+    p = _rglru_params(2, w)
+    u = jnp.asarray(r.standard_normal((B, S, w)), jnp.float32)
+    h0 = jnp.zeros((B, w), jnp.float32)
+    y_full, _ = rg_lru(p, u, h0)
+    _, h_mid = rg_lru(p, u[:, :10], h0)
+    ys = []
+    h = h_mid
+    for t in range(10, S):
+        yt, h = rg_lru(p, u[:, t:t + 1], h)
+        ys.append(yt[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_full[:, 10:]), atol=1e-5)
+
+
+def test_rglru_decay_bounded():
+    """a_t in (0, 1] for any input — state can never blow up."""
+    p = _rglru_params(4, 6)
+    u = jnp.asarray(np.random.default_rng(5).standard_normal((1, 100, 6)) * 50,
+                    jnp.float32)
+    a, _ = _gates(p, u)
+    assert bool(jnp.all(a > 0)) and bool(jnp.all(a <= 1.0))

