@@ -1,0 +1,65 @@
+"""Chip-scale sweep: synfire power and NoC link load vs. mesh size.
+
+SpiNNCer's result at network scale is that peak COMMUNICATION traffic,
+not neuron compute, becomes the bottleneck — this sweep reports exactly
+that: as the ring grows 8 -> 64+ PEs, per-PE power stays flat (the DVFS
+point of the paper) while the peak link load tracks the wave and the
+wrap-around edge crosses an ever-larger mesh.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.chip.chip import ChipSim, chip_power_table
+from repro.chip.workloads import hybrid_workload, tiled_dnn_workload
+
+
+def main(sizes=(8, 16, 32, 64), ticks_per_pe: int = 12) -> None:
+    for n_pes in sizes:
+        sim = ChipSim.synfire(n_pes)
+        n_ticks = max(300, ticks_per_pe * n_pes)   # >= one full ring period
+        # wall time includes the scan trace (run() is cold each call);
+        # block_until_ready so async dispatch doesn't fake the number
+        t0 = time.perf_counter()
+        recs = jax.block_until_ready(sim.run(n_ticks))
+        us = (time.perf_counter() - t0) / n_ticks * 1e6
+        tab = chip_power_table(sim, recs)
+        m = tab["mesh"]
+        emit(f"chip_synfire_{n_pes}pe", us,
+             f"mesh={m[0]}x{m[1]};links={tab['noc']['n_links']};"
+             f"perPE_dvfs_mW={tab['per_pe']['dvfs']['total']:.1f};"
+             f"chip_dvfs_mW={tab['chip']['dvfs']['total']:.0f};"
+             f"chip_pl3_mW={tab['chip']['pl3']['total']:.0f};"
+             f"noc_uW={tab['noc']['power_mw']*1e3:.2f};"
+             f"peak_link={tab['noc']['peak_link_load']:.0f};"
+             f"peak_util={tab['noc']['peak_utilization']:.4f};"
+             f"worst_hops={tab['noc']['worst_tree_hops']}")
+
+    t0 = time.perf_counter()
+    rep = tiled_dnn_workload()
+    us = (time.perf_counter() - t0) * 1e6
+    emit("chip_tiled_dnn", us,
+         f"pes={rep['n_pes_used']};mesh={rep['mesh'][0]}x{rep['mesh'][1]};"
+         f"latency_us={rep['latency_s']*1e6:.0f};"
+         f"compute_us={rep['compute_s']*1e6:.0f};"
+         f"noc_us={rep['noc_s']*1e6:.2f};"
+         f"mac_uJ={rep['energy_mac_j']*1e6:.2f};"
+         f"noc_uJ={rep['energy_noc_j']*1e6:.3f};"
+         f"peak_link={rep['peak_link_load']:.0f}")
+
+    t0 = time.perf_counter()
+    h = hybrid_workload(n_ticks=600)
+    us = (time.perf_counter() - t0) * 1e6
+    emit("chip_hybrid_nef_mlp", us,
+         f"rmse={h['rmse']:.3f};event_vs_frame={h['event_vs_frame']:.4f};"
+         f"spikes={h['total_spikes']:.0f};"
+         f"pj_per_eq_synop={h['synops']['pj_per_eq_synop']:.1f};"
+         f"noc_nJ={h['energy_noc_j']*1e9:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,10 @@ import time
 
 import jax
 
+# every emit() also lands here so the driver can dump a machine-readable
+# artifact (benchmarks/run.py --json)
+RESULTS: list[dict] = []
+
 
 def time_call(fn, *args, warmup=1, iters=3, **kw):
     """Median wall time per call in microseconds (CPU, interpret-mode)."""
@@ -19,5 +23,21 @@ def time_call(fn, *args, warmup=1, iters=3, **kw):
     return ts[len(ts) // 2] * 1e6
 
 
+def _parse_derived(derived: str) -> dict:
+    """'a=1;b=x' -> {'a': 1.0, 'b': 'x'} (numbers parsed where possible)."""
+    out = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+    RESULTS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                    "derived": derived, "values": _parse_derived(derived)})

@@ -1,17 +1,22 @@
 """Benchmark driver — one section per paper table/figure plus framework
 benches.  Prints ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run [--only mac,synfire,...]
+    PYTHONPATH=src python -m benchmarks.run [--only mac,synfire,...] \
+        [--json artifacts/BENCH_latest.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import traceback
+from pathlib import Path
 
 SECTIONS = [
     ("mac", "benchmarks.mac_efficiency", "Fig. 14/15 CoreMark + MAC TOPS/W"),
     ("synfire", "benchmarks.synfire", "Table III synfire DVFS power"),
+    ("chip", "benchmarks.chip_scale", "chip-level mesh: power + link load"),
     ("nef", "benchmarks.nef_channel", "Fig. 20/21 NEF channel + pJ/synop"),
     ("dnn", "benchmarks.dnn_layers", "Fig. 22/23 DNN layer speedups"),
     ("lm", "benchmarks.lm_step", "framework LM step throughput"),
@@ -24,6 +29,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list of sections: "
                     + ",".join(k for k, _, _ in SECTIONS))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as machine-readable JSON")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -40,6 +47,22 @@ def main() -> None:
             failed.append(key)
             print(f"# {key} FAILED: {e}")
             traceback.print_exc()
+
+    if args.json:
+        from benchmarks.common import RESULTS
+        import jax
+        payload = {
+            "rows": RESULTS,
+            "failed_sections": failed,
+            "jax_version": jax.__version__,
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+        }
+        path = Path(args.json)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(payload, indent=1))
+        print(f"# wrote {len(RESULTS)} rows to {path}")
+
     if failed:
         print(f"# sections failed: {failed}")
         sys.exit(1)

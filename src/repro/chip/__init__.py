@@ -1,0 +1,19 @@
+"""Chip-level mesh simulator (paper Sec. III-A/B scaled out).
+
+Composes the per-PE models (core/) into a full W x H QPE mesh:
+
+* ``mesh_noc``  — link enumeration, X/Y multicast-tree incidence tensors,
+  vectorized per-tick link-load / latency / energy accounting.
+* ``mapping``   — SRAM-constrained placement of neuron populations and DNN
+  layer tiles onto PEs; emits routing tables + incidence tensors.
+* ``chip``      — ``ChipSim``: all PEs vectorized in one ``lax.scan`` with
+  per-PE activity-driven DVFS and chip-level power tables.
+* ``workloads`` — scenario builders: synfire ring of any length, tiled
+  feedforward DNN, hybrid NEF + event-driven-MAC pipeline.
+"""
+from repro.chip.mesh_noc import MeshNoc, MeshSpec
+from repro.chip.mapping import Placement, place_ring, place_layers
+from repro.chip.chip import ChipSim, chip_power_table
+
+__all__ = ["MeshNoc", "MeshSpec", "Placement", "place_ring", "place_layers",
+           "ChipSim", "chip_power_table"]

@@ -1,0 +1,119 @@
+"""``ChipSim`` — a virtual SpiNNaker2 chip: W x H QPE mesh of PEs runs a
+spiking workload in one ``jax.lax.scan`` over 1 ms ticks.
+
+All PEs advance together as batched axes of the same arrays (the per-PE
+models in core/snn.py are already (P, ...)-vectorized); what the chip
+level adds per tick is the NoC: each PE's spike-packet count hits its
+precomputed multicast-tree incidence row, one einsum yields per-link
+loads, and the energy/congestion/latency accounting follows from
+``NocSpec`` — no per-source Python in the hot path.
+
+``chip_power_table`` generalizes ``synfire_power_table`` from one PE
+average to the whole chip: per-PE table + chip totals + NoC power + the
+SpiNNCer-style peak-link-load bottleneck check.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.chip.mapping import Placement, place_ring
+from repro.chip.mesh_noc import MeshNoc, MeshSpec, SPIKE_PACKET_BITS
+from repro.configs import paper
+from repro.core.dvfs import DVFSController
+from repro.core.energy import PEEnergyModel
+from repro.core.snn import (SynfireNet, build_synfire, make_synfire_tick,
+                            synfire_init_state, synfire_power_table)
+
+
+@dataclass
+class ChipSim:
+    """A placed spiking workload on a full PE mesh."""
+    net: SynfireNet
+    placement: Placement
+    dvfs: DVFSController = None
+    em: PEEnergyModel = field(default_factory=PEEnergyModel)
+
+    def __post_init__(self):
+        if self.dvfs is None:
+            sp = self.net.params
+            self.dvfs = DVFSController(sp.l_th1, sp.l_th2)
+        assert self.net.params.n_pes == self.placement.n_pes
+
+    @property
+    def noc(self) -> MeshNoc:
+        return self.placement.noc
+
+    @staticmethod
+    def synfire(n_pes: int = 8, mesh: MeshSpec | None = None, seed: int = 0,
+                **build_kw) -> "ChipSim":
+        """Synfire ring of any length placed on a QPE mesh.  With the
+        default 8 PEs this is exactly the paper's test-chip benchmark."""
+        net = build_synfire(seed, n_pes=n_pes, **build_kw)
+        return ChipSim(net=net, placement=place_ring(n_pes, mesh))
+
+    def run(self, n_ticks: int, seed: int = 1) -> dict:
+        """Per-tick records: everything ``simulate_synfire`` returns, plus
+
+        link_load  (T, n_links) — spike packets per link per tick
+        e_noc      (T,)         — NoC spike-traffic energy per tick [J]
+
+        The neuron dynamics are the SAME tick function the single-chip
+        path scans (make_synfire_tick), so an 8-PE ChipSim reproduces
+        ``simulate_synfire`` rasters bit for bit.
+        """
+        tick = make_synfire_tick(self.net, dvfs=self.dvfs, em=self.em,
+                                 key=jax.random.PRNGKey(seed))
+        inc = jnp.asarray(self.placement.inc)
+        noc = self.noc
+
+        def chip_tick(state, t):
+            state, rec = tick(state, t)
+            # each spiking exc neuron emits one multicast packet; the tree
+            # is fixed per source PE, so per-link load is a dense matmul
+            packets = rec["spikes_exc"].astype(jnp.int32).sum(axis=1)  # (P,)
+            loads = noc.link_loads(packets, inc)                       # (L,)
+            rec["link_load"] = loads
+            rec["e_noc"] = noc.spike_energy_j(loads)
+            return state, rec
+
+        _, recs = jax.lax.scan(chip_tick, synfire_init_state(self.net),
+                               jnp.arange(n_ticks))
+        return recs
+
+
+def chip_power_table(sim: ChipSim, recs: dict,
+                     t_sys_s: float = 1e-3) -> dict:
+    """Chip-level generalization of ``synfire_power_table``.
+
+    per_pe     — the paper's Table III numbers (averaged over all PEs)
+    chip       — the same, summed over the mesh [mW]
+    noc        — average NoC power [mW], peak link load [packets/tick],
+                 link utilization vs. capacity, worst multicast hop depth
+    """
+    per_pe = synfire_power_table(recs, t_sys_s=t_sys_s)
+    P = sim.placement.n_pes
+    chip = {mode: {k: v * P for k, v in per_pe[mode].items()}
+            for mode in ("dvfs", "pl3")}
+
+    loads = np.asarray(recs["link_load"])                  # (T, L)
+    e_noc = np.asarray(recs["e_noc"])
+    peak = float(sim.noc.congestion(loads).max()) if loads.size else 0.0
+    cap = sim.noc.link_capacity_packets(t_sys_s, SPIKE_PACKET_BITS)
+    noc = {
+        "power_mw": float(e_noc.mean() / t_sys_s * 1e3),
+        "peak_link_load": peak,
+        "mean_link_load": float(loads.mean()) if loads.size else 0.0,
+        "link_capacity": cap,
+        "peak_utilization": peak / cap,
+        "worst_tree_hops": sim.placement.worst_tree_hops,
+        "worst_hop_latency_s": sim.noc.hop_latency_s(
+            sim.placement.worst_tree_hops),
+        "n_links": sim.noc.n_links,
+    }
+    return {"per_pe": per_pe, "chip": chip, "noc": noc,
+            "n_pes": P, "mesh": (sim.placement.mesh.width,
+                                 sim.placement.mesh.height)}

@@ -1,0 +1,141 @@
+"""Mesh NoC traffic model (paper Sec. III-A/B at chip scale).
+
+The chip is a W x H mesh of QPEs (4 PEs each) joined by directed links.
+Spike delivery is multicast: the router duplicates a packet at branch
+points of its X/Y tree, so a tree's cost is its set of distinct links
+(core/noc.py computes this per source with Python loops).  At chip scale
+that loop is hoisted out of the hot path: each source PE's multicast tree
+is precomputed ONCE as a 0/1 link-incidence row, and per-tick traffic
+becomes a dense einsum
+
+    link_load[l] = sum_p  packets[p] * incidence[p, l]
+
+which vectorizes over ticks, sources, and links inside ``jax.lax.scan``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import paper
+from repro.core.noc import NocSpec, xy_route
+
+SPIKE_PACKET_BITS = 64        # header-only DNoC spike packet (core/noc.py)
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    """W x H QPE mesh; PEs number QPE-major (PE p lives in QPE p // 4)."""
+    width: int
+    height: int
+    pes_per_qpe: int = 4
+
+    @property
+    def n_qpes(self) -> int:
+        return self.width * self.height
+
+    @property
+    def n_pes(self) -> int:
+        return self.n_qpes * self.pes_per_qpe
+
+    def qpe_coord(self, q: int) -> tuple[int, int]:
+        return (q % self.width, q // self.width)
+
+    def pe_coord(self, p: int) -> tuple[int, int]:
+        return self.qpe_coord(p // self.pes_per_qpe)
+
+    @staticmethod
+    def for_pes(n_pes: int, pes_per_qpe: int = 4) -> "MeshSpec":
+        """Smallest near-square mesh holding ``n_pes`` PEs."""
+        q = -(-n_pes // pes_per_qpe)
+        w = int(np.ceil(np.sqrt(q)))
+        h = -(-q // w)
+        return MeshSpec(w, h, pes_per_qpe)
+
+
+@dataclass
+class MeshNoc:
+    """Link enumeration + incidence construction + vectorized accounting."""
+    mesh: MeshSpec
+    spec: NocSpec = field(default_factory=NocSpec)
+
+    def __post_init__(self):
+        links = []
+        for y in range(self.mesh.height):
+            for x in range(self.mesh.width):
+                if x + 1 < self.mesh.width:
+                    links.append(((x, y), (x + 1, y)))
+                    links.append(((x + 1, y), (x, y)))
+                if y + 1 < self.mesh.height:
+                    links.append(((x, y), (x, y + 1)))
+                    links.append(((x, y + 1), (x, y)))
+        self.links = links
+        self.link_index = {lk: i for i, lk in enumerate(links)}
+
+    @property
+    def n_links(self) -> int:
+        return len(self.links)
+
+    # -- incidence construction (setup time, Python) ----------------------
+
+    def tree_links(self, src: tuple, dsts) -> set:
+        """Distinct links of the X/Y multicast tree src -> dsts (shared
+        prefixes paid once — the router duplicates at branch points)."""
+        out: set = set()
+        for d in dsts:
+            if d != src:
+                out.update(xy_route(src, d))
+        return out
+
+    def incidence_row(self, src: tuple, dsts) -> np.ndarray:
+        row = np.zeros(self.n_links, np.float32)
+        for lk in self.tree_links(src, dsts):
+            row[self.link_index[lk]] = 1.0
+        return row
+
+    def incidence(self, src_coords, dst_coord_lists) -> np.ndarray:
+        """(n_sources, n_links) 0/1 multicast-tree incidence tensor."""
+        return np.stack([self.incidence_row(s, d)
+                         for s, d in zip(src_coords, dst_coord_lists)])
+
+    def tree_hops(self, src: tuple, dsts) -> int:
+        """Worst-case hop depth of the multicast tree (packet latency)."""
+        return max((abs(src[0] - d[0]) + abs(src[1] - d[1]) for d in dsts),
+                   default=0)
+
+    # -- per-tick accounting (traced, dense) ------------------------------
+
+    def link_loads(self, packets, inc) -> jnp.ndarray:
+        """packets: (..., n_sources) packet counts emitted per source this
+        tick; inc: (n_sources, n_links).  Returns (..., n_links) loads."""
+        return jnp.einsum("...p,pl->...l", packets.astype(jnp.float32),
+                          jnp.asarray(inc))
+
+    def spike_energy_j(self, loads) -> jnp.ndarray:
+        """Energy of header-only spike packets from total link traversals."""
+        return (loads.sum(axis=-1) * SPIKE_PACKET_BITS
+                * self.spec.pj_per_bit_hop * 1e-12)
+
+    def payload_energy_j(self, loads, payload_bits) -> jnp.ndarray:
+        """Energy of payload packets: each traversal moves ceil(bits/128)
+        DNoC flits of 192 bits."""
+        nflits = -(-payload_bits // self.spec.payload_bits)
+        return (loads.sum(axis=-1) * nflits * self.spec.flit_bits
+                * self.spec.pj_per_bit_hop * 1e-12)
+
+    def congestion(self, loads) -> jnp.ndarray:
+        """Peak per-link load (packets / tick) — the SpiNNCer-style traffic
+        bottleneck metric."""
+        return loads.max(axis=-1)
+
+    def link_capacity_packets(self, t_window_s: float,
+                              packet_bits: int = SPIKE_PACKET_BITS) -> float:
+        """Packets one link can carry in ``t_window_s`` at the NoC clock."""
+        flits = -(-packet_bits // self.spec.payload_bits)
+        cycles_per_packet = self.spec.hop_cycles * flits
+        return t_window_s * self.spec.freq_hz / cycles_per_packet
+
+    def hop_latency_s(self, n_hops) -> float:
+        return n_hops * self.spec.hop_cycles / self.spec.freq_hz

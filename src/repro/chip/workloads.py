@@ -1,0 +1,186 @@
+"""Chip-scale scenario builders.
+
+Three workload families from the paper, each mapped onto the PE mesh:
+
+* ``synfire_workload``   — the Sec. VI-B benchmark generalized from the
+  fixed 8-PE test-chip ring to any ring length (``ChipSim.synfire``).
+* ``tiled_dnn_workload`` — feedforward conv layers split into 128 kB SRAM
+  tiles across PEs (Sec. VI-D), inter-layer activations priced per NoC
+  link traversal.  Static (analytic) latency/energy/link-load report.
+* ``hybrid_workload``    — the Sec. II hybrid: a NEF ensemble (SNN path,
+  Arm core) spikes into an event-triggered MAC MLP (DNN path, MAC array)
+  on a different PE, spike payloads crossing the mesh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.chip.chip import ChipSim, chip_power_table
+from repro.chip.mapping import place_layers
+from repro.chip.mesh_noc import MeshNoc, MeshSpec
+from repro.configs import paper
+from repro.core.hybrid import event_mac, event_mac_energy_j
+from repro.core.nef import build_ensemble, run_channel, synop_metrics
+from repro.core.pe import PESpec
+from repro.core.quant import quantize_params_linear
+
+
+def synfire_workload(n_pes: int = 8, mesh: MeshSpec | None = None,
+                     n_ticks: int = 1200, seed: int = 0) -> dict:
+    """Build, run and account a synfire ring of ``n_pes`` on the mesh."""
+    sim = ChipSim.synfire(n_pes, mesh, seed=seed)
+    recs = sim.run(n_ticks)
+    return {"sim": sim, "recs": recs, "table": chip_power_table(sim, recs)}
+
+
+# -------------------------------------------------------------------------
+# Tiled DNN
+# -------------------------------------------------------------------------
+
+# A small VGG-ish feedforward stack (the paper's Sec. VI-D keyword-spotting
+# class of networks): enough layers to spread over tens of PEs.
+DEFAULT_DNN = [
+    dict(name="conv1", h=32, w=32, cin=3, cout=32, kh=3, kw=3),
+    dict(name="conv2", h=32, w=32, cin=32, cout=32, kh=3, kw=3),
+    dict(name="conv3", h=16, w=16, cin=32, cout=64, kh=3, kw=3),
+    dict(name="conv4", h=16, w=16, cin=64, cout=64, kh=3, kw=3),
+]
+
+
+def tiled_dnn_workload(layers=None, mesh: MeshSpec | None = None,
+                       pe: PESpec = PESpec(),
+                       freq_hz: float = paper.MEP_FREQ) -> dict:
+    """Map a feedforward stack over the mesh and price one inference.
+
+    Per layer: tiles run in parallel on their PEs (latency = slowest tile);
+    the layer's output activations multicast to every next-layer tile, and
+    every link traversal of every flit is charged via ``NocSpec``.
+    """
+    layers = layers or DEFAULT_DNN
+    placements, noc, inc, coords = place_layers(layers, mesh, pe=pe)
+    n_used = len(coords)
+
+    # layers execute SEQUENTIALLY (feedforward): per-layer link loads are
+    # computed separately and the chip-wide peak is the max over layers,
+    # never the sum — two layers' trees sharing a link don't contend.
+    per_layer = []
+    compute_s = 0.0
+    noc_bits = 0.0
+    e_noc = 0.0
+    loads = np.zeros(noc.n_links, np.float32)
+    for lp, nxt in zip(placements, placements[1:] + [None]):
+        t_layer = lp.cycles_per_tile / freq_hz
+        compute_s += t_layer
+        # activations to the next layer: one multicast burst per source
+        # tile, links from the precomputed incidence rows
+        bits = 0.0
+        if nxt is not None:
+            payload_bits = lp.out_bytes * 8 / max(lp.n_tiles, 1)
+            packets = np.zeros(n_used, np.float32)
+            packets[lp.pes] = 1.0
+            l_layer = np.asarray(noc.link_loads(jnp.asarray(packets), inc))
+            loads = np.maximum(loads, l_layer)
+            nflits = -(-payload_bits // noc.spec.payload_bits)
+            bits = float(l_layer.sum()) * nflits * noc.spec.flit_bits
+            e_noc += float(noc.payload_energy_j(l_layer, payload_bits))
+        noc_bits += bits
+        per_layer.append({
+            "name": lp.name, "n_tiles": lp.n_tiles,
+            "rows_per_tile": lp.rows_per_tile,
+            "cout_per_tile": lp.cout_per_tile,
+            "cycles_per_tile": lp.cycles_per_tile,
+            "layer_latency_s": t_layer,
+            "noc_bits_out": bits,
+        })
+
+    noc_s = noc_bits / 8 / (noc.spec.freq_hz * 16)   # 128-bit/clk links
+    e_mac = sum(
+        2.0 * lp.cycles_per_tile * pe.macs_per_cycle * lp.n_tiles
+        for lp in placements) / (paper.MAC_TOPS_PER_W[(0.50, 200e6)] * 1e12)
+    return {
+        "layers": per_layer,
+        "n_pes_used": n_used,
+        "mesh": (noc.mesh.width, noc.mesh.height),
+        "latency_s": compute_s + noc_s,
+        "compute_s": compute_s,
+        "noc_s": noc_s,
+        "energy_mac_j": e_mac,
+        "energy_noc_j": e_noc,
+        "link_loads": loads,
+        "peak_link_load": float(noc.congestion(loads)) if loads.size else 0.0,
+    }
+
+
+# -------------------------------------------------------------------------
+# Hybrid NEF + MLP
+# -------------------------------------------------------------------------
+
+def hybrid_workload(n_neurons: int = 256, hidden: int = 64,
+                    n_ticks: int = 600, mesh: MeshSpec | None = None,
+                    seed: int = 0) -> dict:
+    """NEF ensemble on PE A, event-triggered MAC MLP on PE B (Sec. II).
+
+    Each tick the ensemble's spike vector crosses the mesh as a payload
+    multicast; ticks with no spikes dispatch NOTHING to the MAC array —
+    energy follows activity on the NoC and in the datapath alike.
+    """
+    mesh = mesh or MeshSpec.for_pes(8)
+    noc = MeshNoc(mesh)
+    ens = build_ensemble(n_neurons, 1, seed=seed)
+
+    # drive the channel with a slow sine (Fig. 20's stimulus class)
+    t = np.arange(n_ticks)
+    x = 0.8 * np.sin(2 * np.pi * t / 400)[:, None]
+    out = run_channel(ens, x, use_mac=True)
+    spikes = jnp.asarray(out["spikes"], jnp.float32)          # (T, N)
+    active = spikes.sum(axis=1) > 0                           # (T,)
+
+    # MLP on the far corner PE: event rows = per-tick spike vectors
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((n_neurons, hidden)) * 0.1,
+                    jnp.float32)
+    wq, ws = quantize_params_linear(w)
+    h, n_disp = event_mac(spikes, active, wq, ws)
+
+    # NoC: NEF PE at one corner, MLP PE at the other — worst-case X/Y path
+    src = (0, 0)
+    dst = (mesh.width - 1, mesh.height - 1)
+    inc = noc.incidence_row(src, [dst])[None]                 # (1, L)
+    # payload: the active-neuron bitmap + graded values, 16 b per spike;
+    # one burst per active tick, flit/energy accounting via NocSpec
+    payload_bits = spikes.sum(axis=1).astype(jnp.int32) * 16  # (T,)
+    bursts = active.astype(jnp.float32)[:, None]              # (T, 1)
+    pkt_loads = noc.link_loads(bursts, inc)                   # (T, L)
+    e_noc = float(np.asarray(
+        noc.payload_energy_j(pkt_loads, payload_bits).sum()))
+    nflits = -(-payload_bits // noc.spec.payload_bits)
+    loads = pkt_loads * nflits[:, None]                       # flits per link
+
+    # energy: event-triggered MAC accumulates one weight row per spike
+    # (2*hidden ops), vs. frame-based which multiplies the full N x hidden
+    # matrix every tick — the ratio is exactly the mean firing rate
+    total_spikes = float(np.asarray(out["spikes_per_tick"]).sum())
+    e_mac = event_mac_energy_j(total_spikes, 1, hidden)
+    e_frame = event_mac_energy_j(n_ticks, n_neurons, hidden)
+    e_tick = (n_neurons * paper.NEF_E_NEURON_J
+              + np.asarray(out["spikes_per_tick"]) * 1 * 0.2e-9)
+    return {
+        "xhat": out["xhat"],
+        "x": x,
+        "rmse": float(np.sqrt(np.mean(
+            (out["xhat"][n_ticks // 4:, 0] - x[n_ticks // 4:, 0]) ** 2))),
+        "n_dispatched": int(n_disp),
+        "total_spikes": total_spikes,
+        "duty_cycle": float(np.asarray(active).mean()),
+        "energy_mac_j": e_mac,
+        "energy_mac_frame_j": e_frame,
+        "event_vs_frame": e_mac / e_frame,
+        "energy_noc_j": e_noc,
+        "link_loads": np.asarray(loads),
+        "synops": synop_metrics(ens, np.asarray(out["spikes_per_tick"]),
+                                e_tick),
+        "hidden_out": np.asarray(h),
+    }

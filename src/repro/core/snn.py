@@ -19,6 +19,7 @@ current; a stimulus pulse packet kick-starts PE 0.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 
 import jax
@@ -52,7 +53,13 @@ class SynfireNet:
 def build_synfire(seed: int = 0, *, w_exc: float = 0.075, w_inh: float = -0.30,
                   noise_sigma: float = 0.30, tau_ms: float = 10.0,
                   v_th: float = 1.0, ref_ticks: int = 2,
-                  sp: paper.SynfireParams = paper.SYNFIRE) -> SynfireNet:
+                  sp: paper.SynfireParams = paper.SYNFIRE,
+                  n_pes: int | None = None,
+                  v_min: float | None = -1.0) -> SynfireNet:
+    """Build the synfire ring.  ``n_pes`` generalizes the fixed 8-PE test
+    chip ring to any length (repro.chip places long rings on a mesh)."""
+    if n_pes is not None and n_pes != sp.n_pes:
+        sp = dataclasses.replace(sp, n_pes=n_pes)
     rng = np.random.default_rng(seed)
     P_, NE, NI = sp.n_pes, sp.n_exc, sp.n_inh
     N = sp.neurons_per_core
@@ -66,8 +73,11 @@ def build_synfire(seed: int = 0, *, w_exc: float = 0.075, w_inh: float = -0.30,
         for tgt in range(NE):
             src = rng.choice(NI, sp.fan_in_inh, replace=False)
             w_inh_m[p, src, tgt] = w_inh
+    # v_min bounds hyperpolarization (inhibitory reversal): without it,
+    # tonic background inhibition drives the membrane ~3 v_th below rest
+    # and the synfire wave dies before completing one ring traversal.
     lif = lif_params_fx(tau_ms=tau_ms, v_th=v_th, v_reset=0.0,
-                        ref_ticks=ref_ticks)
+                        ref_ticks=ref_ticks, v_min=v_min)
     return SynfireNet(
         params=sp,
         w_ff=jnp.asarray(np.round(w_ff * FX_ONE), jnp.int32),
@@ -81,27 +91,32 @@ def build_synfire(seed: int = 0, *, w_exc: float = 0.075, w_inh: float = -0.30,
     )
 
 
-def simulate_synfire(net: SynfireNet, n_ticks: int, seed: int = 1):
-    """Returns per-tick records (all (T, P) unless noted):
+def synfire_init_state(net: SynfireNet) -> dict:
+    """Zeroed membrane/refractory state and delay-line FIFO buffers."""
+    sp = net.params
+    P_, NE, NI = sp.n_pes, sp.n_exc, sp.n_inh
+    N = sp.neurons_per_core
+    return {
+        "v": jnp.zeros((P_, N), jnp.int32),
+        "ref": jnp.zeros((P_, N), jnp.int32),
+        "exc_buf": jnp.zeros((int(sp.delay_exc_ms), P_, NE), jnp.int32),
+        "inh_buf": jnp.zeros((int(sp.delay_inh_ms), P_, NI), jnp.int32),
+    }
 
-    pl, n_fifo, syn_events, spikes_exc (T,P,200), spikes_inh (T,P,50),
-    plus both energy accountings (dvfs / only-PL3).
+
+def make_synfire_tick(net: SynfireNet, *, dvfs: DVFSController,
+                      em: PEEnergyModel, key, exchange=ring_exchange):
+    """Build the per-tick step ``tick(state, t) -> (state, rec)``.
+
+    ``exchange`` delivers each PE's exc spikes to its ring successor; the
+    chip-level simulator passes the same function but adds NoC link-load
+    accounting on top of the returned record (repro.chip.chip.ChipSim).
     """
     sp = net.params
     P_, NE, NI = sp.n_pes, sp.n_exc, sp.n_inh
     N = sp.neurons_per_core
     d_exc = int(sp.delay_exc_ms)
     d_inh = int(sp.delay_inh_ms)
-    dvfs = DVFSController(sp.l_th1, sp.l_th2)
-    em = PEEnergyModel()
-    key = jax.random.PRNGKey(seed)
-
-    state0 = {
-        "v": jnp.zeros((P_, N), jnp.int32),
-        "ref": jnp.zeros((P_, N), jnp.int32),
-        "exc_buf": jnp.zeros((d_exc, P_, NE), jnp.int32),
-        "inh_buf": jnp.zeros((d_inh, P_, NI), jnp.int32),
-    }
 
     def tick(state, t):
         k = jax.random.fold_in(key, t)
@@ -130,7 +145,7 @@ def simulate_synfire(net: SynfireNet, n_ticks: int, seed: int = 1):
         spk_exc, spk_inh = spk[:, :NE], spk[:, NE:]
 
         # 5. route spikes (multicast ring -> next PE FIFO; inh -> own FIFO)
-        exc_out = ring_exchange(spk_exc)               # to PE i+1
+        exc_out = exchange(spk_exc)                    # to PE i+1
         exc_buf = state["exc_buf"].at[t % d_exc].set(exc_out)
         inh_buf = state["inh_buf"].at[t % d_inh].set(spk_inh)
 
@@ -155,7 +170,21 @@ def simulate_synfire(net: SynfireNet, n_ticks: int, seed: int = 1):
         }
         return new_state, rec
 
-    _, recs = jax.lax.scan(tick, state0, jnp.arange(n_ticks))
+    return tick
+
+
+def simulate_synfire(net: SynfireNet, n_ticks: int, seed: int = 1):
+    """Returns per-tick records (all (T, P) unless noted):
+
+    pl, n_fifo, syn_events, spikes_exc (T,P,200), spikes_inh (T,P,50),
+    plus both energy accountings (dvfs / only-PL3).
+    """
+    sp = net.params
+    dvfs = DVFSController(sp.l_th1, sp.l_th2)
+    em = PEEnergyModel()
+    tick = make_synfire_tick(net, dvfs=dvfs, em=em,
+                             key=jax.random.PRNGKey(seed))
+    _, recs = jax.lax.scan(tick, synfire_init_state(net), jnp.arange(n_ticks))
     return recs
 
 

@@ -1,0 +1,1 @@
+from repro.dist import sharding  # noqa: F401

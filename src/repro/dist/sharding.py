@@ -1,0 +1,129 @@
+"""Logical-axis sharding rules (t5x-style) for the framework layer.
+
+Each tensor dimension carries a logical name; ``RULES`` lists the mesh axes
+that dimension may shard over, in preference order.  ``spec_for`` resolves a
+shape to a PartitionSpec greedily: a mesh axis is used at most once per spec
+and only when it divides the dimension — otherwise the dim replicates.
+
+This mirrors the SpiNNaker2 mapping problem one level up: populations ->
+PEs there, tensor dims -> mesh axes here (see repro.chip.mapping).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# logical dim name -> mesh axes it may occupy, in preference order
+RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("data",),
+    "embed": ("data",),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "vocab": ("model", "data"),
+    "seq": ("data", "model"),
+    "expert": ("model", "data"),
+}
+
+
+def _axis_size(mesh, axes) -> int:
+    """Product of the mesh extents of ``axes`` (str or iterable of str)."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_for(shape, names, mesh) -> P:
+    """Resolve (shape, logical names) -> PartitionSpec over ``mesh``.
+
+    Greedy, never reuses a mesh axis, and only shards a dim whose size is
+    divisible by the axis extent.
+    """
+    used: set[str] = set()
+    entries = []
+    for dim, name in zip(shape, names):
+        pick = None
+        for ax in RULES.get(name, ()):
+            if ax in used or ax not in mesh.shape:
+                continue
+            if dim % mesh.shape[ax] == 0:
+                pick = ax
+                used.add(ax)
+                break
+        entries.append(pick)
+    return P(*entries)
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes that carry the data-parallel (batch) dimension."""
+    return tuple(a for a in ("pod", "data") if a in getattr(mesh, "shape", {}))
+
+
+def data_spec(shape, mesh, batch_dim: int = 0) -> P:
+    """Global-batch placement: shard the batch dim over the data axes (when
+    divisible), replicate everything else."""
+    entries: list = [None] * len(shape)
+    ba = [a for a in batch_axes(mesh) if mesh.shape[a] > 1]
+    if ba and shape[batch_dim] % _axis_size(mesh, ba) == 0:
+        entries[batch_dim] = ba[0] if len(ba) == 1 else tuple(ba)
+    return P(*entries)
+
+
+def act_hint(x, mesh, names):
+    """Activation sharding hint: resolve logical ``names`` (None = replicate)
+    to a PartitionSpec over ``mesh`` and apply a with_sharding_constraint.
+
+    Elements may be logical dim names (resolved through RULES) or literal
+    mesh axis names.  A dim not divisible by its axis extent replicates —
+    hints must never make a program unshardable.  No-op without a mesh.
+    """
+    if mesh is None:
+        return x
+    used: set[str] = set()
+    entries = []
+    for dim, name in zip(x.shape, names):
+        pick = None
+        if name is not None:
+            cands = RULES.get(name, (name,) if name in mesh.shape else ())
+            for ax in cands:
+                if ax in used or ax not in mesh.shape:
+                    continue
+                if dim % mesh.shape[ax] == 0:
+                    pick = ax
+                    used.add(ax)
+                    break
+        entries.append(pick)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def cache_spec(shape, mesh, *, batch_dim, seq_dim, kv_dim) -> P:
+    """KV-cache layout: batch -> data, kv-heads -> model, and the sequence
+    dim greedily absorbs whatever axes remain (growing a tuple while the
+    combined extent still divides the sequence length)."""
+    entries: list = [None] * len(shape)
+    used: set[str] = set()
+
+    if "data" in mesh.shape and shape[batch_dim] % mesh.shape["data"] == 0 \
+            and shape[batch_dim] > 1:
+        entries[batch_dim] = "data"
+        used.add("data")
+    if "model" in mesh.shape and shape[kv_dim] % mesh.shape["model"] == 0 \
+            and shape[kv_dim] > 1:
+        entries[kv_dim] = "model"
+        used.add("model")
+
+    leftover = [a for a in mesh.shape if a not in used]
+    taken: list[str] = []
+    for ax in leftover:
+        cand = taken + [ax]
+        if shape[seq_dim] % _axis_size(mesh, cand) == 0:
+            taken = cand
+    if len(taken) == 1:
+        entries[seq_dim] = taken[0]
+    elif taken:
+        entries[seq_dim] = tuple(taken)
+    return P(*entries)

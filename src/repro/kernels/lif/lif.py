@@ -20,12 +20,14 @@ LANES = 128
 
 
 def _lif_kernel(v_ref, ref_ref, isyn_ref, vo_ref, refo_ref, sp_ref, *,
-                alpha, v_th, v_reset, ref_ticks):
+                alpha, v_th, v_reset, ref_ticks, v_min=None):
     v = v_ref[...].astype(jnp.int32)
     rc = ref_ref[...].astype(jnp.int32)
     isyn = isyn_ref[...].astype(jnp.int32)
     active = rc <= 0
     v1 = fx_mul(v, jnp.int32(alpha)) + isyn
+    if v_min is not None:
+        v1 = jnp.maximum(v1, jnp.int32(v_min))
     spike = active & (v1 >= v_th)
     vo_ref[...] = jnp.where(spike, v_reset, jnp.where(active, v1, v))
     refo_ref[...] = jnp.where(spike, ref_ticks, jnp.maximum(rc - 1, 0))
@@ -33,12 +35,13 @@ def _lif_kernel(v_ref, ref_ref, isyn_ref, vo_ref, refo_ref, sp_ref, *,
 
 
 def lif_step_pallas(v, ref_ct, i_syn, *, alpha, v_th, v_reset, ref_ticks,
-                    interpret=True):
+                    v_min=None, interpret=True):
     """All inputs (R, 128) int32; R multiple of BLOCK_ROWS."""
     R, C = v.shape
     assert C == LANES and R % BLOCK_ROWS == 0
     kernel = functools.partial(_lif_kernel, alpha=alpha, v_th=v_th,
-                               v_reset=v_reset, ref_ticks=ref_ticks)
+                               v_reset=v_reset, ref_ticks=ref_ticks,
+                               v_min=v_min)
     bs = pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
     sds = jax.ShapeDtypeStruct((R, C), jnp.int32)
     return pl.pallas_call(

@@ -18,14 +18,21 @@ def fx_mul(a, b):
     return ah * b + ((al * b) >> FRAC)
 
 
-def lif_step_ref(v, ref_ct, i_syn, *, alpha, v_th, v_reset, ref_ticks):
+def lif_step_ref(v, ref_ct, i_syn, *, alpha, v_th, v_reset, ref_ticks,
+                 v_min=None):
     """One 1 ms tick.  All int32 s16.15 except ref_ct (int32 counts).
+
+    ``v_min`` (optional, s16.15) is the inhibitory reversal floor: the
+    membrane cannot hyperpolarize below it, bounding the effect of tonic
+    inhibition (conductance-based synapses saturate at E_inh).
 
     Returns (v_new, ref_new, spikes int32).
     """
     v = v.astype(jnp.int32)
     active = ref_ct <= 0
     v1 = fx_mul(v, jnp.int32(alpha)) + i_syn.astype(jnp.int32)
+    if v_min is not None:
+        v1 = jnp.maximum(v1, jnp.int32(v_min))
     spike = active & (v1 >= v_th)
     v_new = jnp.where(spike, v_reset, jnp.where(active, v1, v))
     ref_new = jnp.where(spike, ref_ticks, jnp.maximum(ref_ct - 1, 0))

@@ -1,0 +1,81 @@
+"""Placement: SRAM constraints, snake order, routing tables, incidence."""
+import numpy as np
+import pytest
+
+from repro.chip.mapping import (Placement, place_layers, place_ring,
+                                snake_order, synfire_sram_bytes)
+from repro.chip.mesh_noc import MeshSpec
+from repro.core.pe import PESpec, partition_layer_to_sram
+
+
+def test_mesh_autosize():
+    assert MeshSpec.for_pes(8).n_pes >= 8
+    assert MeshSpec.for_pes(8).n_qpes == 2
+    m = MeshSpec.for_pes(64)
+    assert (m.width, m.height) == (4, 4) and m.n_pes == 64
+
+
+def test_snake_order_is_mesh_adjacent():
+    mesh = MeshSpec(4, 3)
+    order = snake_order(mesh)
+    assert sorted(order) == list(range(12))
+    for a, b in zip(order, order[1:]):
+        (xa, ya), (xb, yb) = mesh.qpe_coord(a), mesh.qpe_coord(b)
+        assert abs(xa - xb) + abs(ya - yb) == 1
+
+
+def test_synfire_state_fits_sram():
+    assert PESpec().fits_sram(synfire_sram_bytes())
+
+
+def test_place_ring_8_matches_test_chip():
+    pl = place_ring(8)
+    assert pl.n_pes == 8
+    assert (pl.mesh.width, pl.mesh.height) == (2, 1)
+    # ring neighbours: intra-QPE hops are free, two links cross between QPEs
+    assert pl.inc.sum() == 2
+    assert pl.fits()
+    assert pl.worst_tree_hops == 1
+
+
+def test_place_ring_locality_on_large_mesh():
+    pl = place_ring(64)
+    # snake placement: every ring edge except those crossing QPE rows is a
+    # 1-hop (or free intra-QPE) delivery; per-source trees are tiny
+    per_src_links = pl.inc.sum(axis=1)
+    assert per_src_links.max() <= pl.mesh.width + pl.mesh.height  # wrap edge
+    assert np.median(per_src_links) <= 1.0
+
+
+def test_place_ring_rejects_oversize():
+    with pytest.raises(ValueError):
+        place_ring(64, MeshSpec(2, 2))
+
+
+def test_place_layers_tiles_fit_and_route():
+    layers = [
+        dict(name="c1", h=32, w=32, cin=3, cout=32, kh=3, kw=3),
+        dict(name="c2", h=32, w=32, cin=32, cout=32, kh=3, kw=3),
+    ]
+    placements, noc, inc, coords = place_layers(layers)
+    total = sum(lp.n_tiles for lp in placements)
+    assert len(coords) == total == inc.shape[0]
+    assert inc.shape[1] == noc.n_links
+    pe = PESpec()
+    for lp, ly in zip(placements, layers):
+        # the chosen tiling must actually fit the 128 kB SRAM
+        rows, cout_t, n = partition_layer_to_sram(
+            pe, ly["h"], ly["w"], ly["cin"], ly["cout"], ly["kh"], ly["kw"])
+        assert (rows, cout_t, n) == (lp.rows_per_tile, lp.cout_per_tile,
+                                     lp.n_tiles)
+        in_b = (rows + ly["kh"] - 1) * ly["w"] * ly["cin"]
+        w_b = ly["kh"] * ly["kw"] * ly["cin"] * cout_t
+        out_b = rows * ly["w"] * cout_t * 4
+        assert pe.fits_sram(in_b, w_b, out_b)
+    # layer 1 tiles multicast to every layer 2 tile; last layer sends nothing
+    c1, c2 = placements
+    for p in c1.pes:
+        assert inc[p].sum() >= 0          # row exists
+    # masks: c1 -> c2 only
+    placements2, noc2, inc2, _ = place_layers(layers, MeshSpec(3, 3))
+    assert noc2.mesh.n_pes == 36

@@ -1,0 +1,117 @@
+"""ChipSim acceptance: 8-PE ring reproduces the seed single-chip results
+bit for bit; a 64-PE mesh runs the same workload with per-link load and
+DVFS power reported."""
+import numpy as np
+import pytest
+
+from repro.chip.chip import ChipSim, chip_power_table
+from repro.chip.workloads import hybrid_workload, tiled_dnn_workload
+from repro.core.snn import build_synfire, simulate_synfire
+
+
+@pytest.fixture(scope="module")
+def chip8():
+    sim = ChipSim.synfire(8)
+    return sim, sim.run(1200)
+
+
+@pytest.fixture(scope="module")
+def chip64():
+    sim = ChipSim.synfire(64)
+    return sim, sim.run(700)
+
+
+def test_chip8_reproduces_seed_rasters(chip8):
+    sim, recs = chip8
+    ref = simulate_synfire(build_synfire(0), 300)
+    got = {k: np.asarray(v)[:300] for k, v in recs.items()}
+    for k in ("spikes_exc", "spikes_inh", "pl", "n_fifo", "syn_events"):
+        assert np.array_equal(got[k], np.asarray(ref[k])), k
+
+
+def test_chip8_table_iii_within_tolerance(chip8):
+    """Same acceptance band as the single-chip test (paper Table III)."""
+    sim, recs = chip8
+    tab = chip_power_table(sim, recs)
+    per_pe = tab["per_pe"]
+    assert abs(per_pe["pl3"]["baseline"] - 66.44) < 0.1
+    assert abs(per_pe["dvfs"]["baseline"] - 24.3) < 3.0
+    assert 0.52 <= per_pe["reduction"]["total"] <= 0.72
+    # chip totals are per-PE x 8
+    np.testing.assert_allclose(tab["chip"]["dvfs"]["total"],
+                               per_pe["dvfs"]["total"] * 8)
+
+
+def test_chip8_wave_and_link_loads(chip8):
+    sim, recs = chip8
+    spk = np.asarray(recs["spikes_exc"]).sum(axis=2)
+    for p in range(8):
+        waves = np.where(spk[:, p] > 100)[0]
+        assert len(waves) >= 5, f"PE{p} wave died"
+        assert np.all(np.abs(np.diff(waves[:5]) - 80) <= 2)
+    loads = np.asarray(recs["link_load"])            # (T, 2)
+    assert loads.shape[1] == sim.noc.n_links == 2
+    # the wave crosses the inter-QPE links once per 80-tick period
+    assert loads.max() > 100
+
+
+def test_chip64_runs_and_reports(chip64):
+    sim, recs = chip64
+    assert sim.placement.n_pes == 64
+    assert (sim.placement.mesh.width, sim.placement.mesh.height) == (4, 4)
+    spk = np.asarray(recs["spikes_exc"]).sum(axis=2)
+    # wave traverses the whole ring: PE63 fires strongly at ~t=630
+    w63 = np.where(spk[:, 63] > 100)[0]
+    assert len(w63) >= 1 and abs(w63[0] - 630) <= 5
+    # and returns to PE0 (period 640)
+    w0 = np.where(spk[:, 0] > 100)[0]
+    assert len(w0) >= 2 and abs(w0[1] - 640) <= 5
+
+    tab = chip_power_table(sim, recs)
+    assert tab["n_pes"] == 64
+    # per-PE DVFS power stays in the single-chip band at 8x scale
+    assert abs(tab["per_pe"]["dvfs"]["baseline"] - 24.3) < 3.0
+    # link loads observed on the mesh, utilization far below capacity
+    assert tab["noc"]["peak_link_load"] > 100
+    assert 0 < tab["noc"]["peak_utilization"] < 0.1
+    assert tab["noc"]["worst_tree_hops"] >= 2
+    loads = np.asarray(recs["link_load"])
+    assert loads.shape == (700, sim.noc.n_links)
+    # only links on some ring edge ever carry traffic
+    used = loads.sum(axis=0) > 0
+    on_tree = np.asarray(sim.placement.inc).sum(axis=0) > 0
+    assert np.array_equal(used, used & on_tree)
+
+
+def test_chip_dvfs_tracks_wave(chip64):
+    """DVFS: the PE processing the wave runs at PL3 that tick, idles at
+    PL1 otherwise — activity-driven power at chip scale."""
+    sim, recs = chip64
+    pl = np.asarray(recs["pl"])
+    spk = np.asarray(recs["spikes_exc"]).sum(axis=2)
+    t = 320                                            # wave at PE32
+    assert spk[t, 32] > 100
+    assert pl[t + 10, 33] == 2                         # FIFO full -> PL3
+    frac_pl1 = (pl == 0).mean()
+    assert frac_pl1 > 0.9
+
+
+def test_tiled_dnn_workload_report():
+    rep = tiled_dnn_workload()
+    assert rep["n_pes_used"] >= 4
+    assert rep["latency_s"] > 0 and rep["compute_s"] > 0
+    assert rep["energy_mac_j"] > 0 and rep["energy_noc_j"] > 0
+    assert rep["link_loads"].shape[0] > 0
+    # per-layer latency sums to the compute total
+    total = sum(l["layer_latency_s"] for l in rep["layers"])
+    np.testing.assert_allclose(total, rep["compute_s"], rtol=1e-9)
+
+
+def test_hybrid_workload_event_energy():
+    h = hybrid_workload(n_ticks=400)
+    assert h["rmse"] < 0.25                            # channel tracks input
+    # event-triggered MAC energy ~ firing rate << frame-based
+    assert h["event_vs_frame"] < 0.3
+    assert h["energy_mac_j"] < h["energy_mac_frame_j"]
+    assert h["energy_noc_j"] > 0
+    assert h["synops"]["pj_per_eq_synop"] < 30.0       # beats Loihi's 24

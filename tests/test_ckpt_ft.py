@@ -100,6 +100,7 @@ def test_retry_on_injected_failure(tmp_path):
 def test_elastic_restore_new_mesh(tmp_path):
     """Save unsharded, restore with explicit shardings on a (1,1) mesh —
     the elastic-rescale path (mesh shape independent of the saved one)."""
+    pytest.importorskip("repro.dist.cells")
     cfg = configs.get_arch("glm4-9b").smoke()
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     m = CheckpointManager(tmp_path, async_save=False)

@@ -8,6 +8,8 @@ from pathlib import Path
 
 import pytest
 
+pytest.importorskip("repro.dist.cells")
+
 ROOT = Path(__file__).resolve().parents[1]
 
 SCRIPT = r"""

@@ -2,6 +2,8 @@
 monotonicity, algebraic properties."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.kernels.explog import (

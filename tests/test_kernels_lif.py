@@ -1,6 +1,8 @@
 """LIF kernel: bit-exact vs oracle + neuron behavior properties."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.kernels.explog.ops import to_fx

@@ -1,5 +1,7 @@
 """SpiNNaker packet format + TCAM routing (paper Fig. 4-6)."""
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.packets import (

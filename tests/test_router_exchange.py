@@ -1,0 +1,84 @@
+"""Router delivery: dense path vs. mesh/shard_map path agree, and
+delivery conserves spike counts (satellite of the chip-mesh PR).
+
+The shard_map paths need >1 device, so they run in a subprocess with a
+forced 4-device host platform (same pattern as test_dryrun_integration)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.router import RoutingTable, multicast_exchange, ring_exchange
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def test_multicast_dense_conserves_spikes():
+    rng = np.random.default_rng(0)
+    spk = jnp.asarray(rng.integers(0, 3, (6, 5)), jnp.int32)
+    for table in (RoutingTable.ring(6), RoutingTable.self_loop(6)):
+        arr = multicast_exchange(spk, table)           # (P, P, K)
+        sent = np.asarray(spk) * table.fan_out()[:, None]
+        assert int(np.asarray(arr).sum()) == int(sent.sum())
+
+
+def test_multicast_dense_respects_masks():
+    rng = np.random.default_rng(1)
+    masks = rng.random((4, 4)) < 0.5
+    spk = jnp.asarray(rng.integers(0, 2, (4, 3)), jnp.int32)
+    arr = np.asarray(multicast_exchange(spk, RoutingTable(masks)))
+    for i in range(4):
+        for p in range(4):
+            expect = np.asarray(spk[i]) * int(masks[i, p])
+            assert np.array_equal(arr[p, i], expect)
+
+
+def test_ring_exchange_conserves_and_shifts():
+    rng = np.random.default_rng(2)
+    spk = jnp.asarray(rng.integers(0, 4, (5, 7)), jnp.int32)
+    out = ring_exchange(spk)
+    assert int(out.sum()) == int(spk.sum())
+    assert np.array_equal(np.asarray(out), np.roll(np.asarray(spk), 1, 0))
+
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+import repro                                   # installs compat shims
+from repro.core.router import RoutingTable, multicast_exchange, ring_exchange
+
+mesh = jax.make_mesh((4,), ("pe",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.default_rng(0)
+spk = jnp.asarray(rng.integers(0, 3, (4, 6)), jnp.int32)
+
+# ring: jnp.roll path vs collective_permute path
+dense = ring_exchange(spk)
+sharded = ring_exchange(spk, mesh=mesh)
+assert np.array_equal(np.asarray(dense), np.asarray(sharded)), "ring mismatch"
+
+# multicast: dense einsum vs all_gather+mask path, plus conservation
+for masks in (np.asarray(RoutingTable.ring(4).masks),
+              rng.random((4, 4)) < 0.5):
+    table = RoutingTable(np.asarray(masks))
+    d = np.asarray(multicast_exchange(spk, table))
+    s = np.asarray(multicast_exchange(spk, table, mesh=mesh))
+    assert np.array_equal(d, s), "multicast mismatch"
+    sent = np.asarray(spk) * table.fan_out()[:, None]
+    assert int(d.sum()) == int(sent.sum()), "conservation"
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_exchange_paths_agree_on_forced_mesh():
+    env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

@@ -1,6 +1,8 @@
 """NoC / router model properties."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.noc import NocModel, hops, multicast_links, xy_route

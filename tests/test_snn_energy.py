@@ -7,6 +7,7 @@ from repro.configs import paper
 from repro.core.dvfs import DVFSController
 from repro.core.energy import PEEnergyModel
 from repro.core.snn import build_synfire, simulate_synfire, synfire_power_table
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 
