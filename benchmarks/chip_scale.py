@@ -1,10 +1,16 @@
-"""Chip-scale sweep: synfire power and NoC link load vs. mesh size.
+"""Chip-scale sweep: compiled workload programs vs. mesh size.
 
 SpiNNCer's result at network scale is that peak COMMUNICATION traffic,
 not neuron compute, becomes the bottleneck — this sweep reports exactly
-that: as the ring grows 8 -> 64+ PEs, per-PE power stays flat (the DVFS
-point of the paper) while the peak link load tracks the wave and the
-wrap-around edge crosses an ever-larger mesh.
+that, now for all three workload classes through the unified
+graph -> compile -> ChipProgram pipeline:
+
+* synfire rings 8 -> 64+ PEs: per-PE power stays flat (the DVFS point of
+  the paper) while peak link load tracks the wave.
+* the tiled-DNN pipeline: frames streamed tick-by-tick, graded activation
+  bursts priced in DNoC flits, pipeline latency + MAC/NoC energy.
+* the hybrid NEF -> event-MAC program: spike-vector payloads over the
+  mesh, event-vs-frame energy, graded-payload conservation.
 """
 from __future__ import annotations
 
@@ -15,12 +21,14 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.chip.chip import ChipSim, chip_power_table
-from repro.chip.workloads import hybrid_workload, tiled_dnn_workload
+from repro.chip.compile import compile as compile_graph
+from repro.chip.workloads import (hybrid_workload, synfire_graph,
+                                  tiled_dnn_workload)
 
 
 def main(sizes=(8, 16, 32, 64), ticks_per_pe: int = 12) -> None:
     for n_pes in sizes:
-        sim = ChipSim.synfire(n_pes)
+        sim = ChipSim(compile_graph(synfire_graph(n_pes)))
         n_ticks = max(300, ticks_per_pe * n_pes)   # >= one full ring period
         # wall time includes the scan trace (run() is cold each call);
         # block_until_ready so async dispatch doesn't fake the number
@@ -39,26 +47,33 @@ def main(sizes=(8, 16, 32, 64), ticks_per_pe: int = 12) -> None:
              f"peak_util={tab['noc']['peak_utilization']:.4f};"
              f"worst_hops={tab['noc']['worst_tree_hops']}")
 
+    # tiled DNN: the compiled program streams frames tick-by-tick
     t0 = time.perf_counter()
-    rep = tiled_dnn_workload()
+    rep = jax.block_until_ready(tiled_dnn_workload())
     us = (time.perf_counter() - t0) * 1e6
-    emit("chip_tiled_dnn", us,
+    tab = rep["table"]
+    emit("chip_tiled_dnn_program", us,
          f"pes={rep['n_pes_used']};mesh={rep['mesh'][0]}x{rep['mesh'][1]};"
-         f"latency_us={rep['latency_s']*1e6:.0f};"
-         f"compute_us={rep['compute_s']*1e6:.0f};"
-         f"noc_us={rep['noc_s']*1e6:.2f};"
+         f"frames={rep['n_frames_out']};"
+         f"latency_ms={rep['latency_s']*1e3:.1f};"
+         f"compute_ms={rep['compute_s']*1e3:.1f};"
          f"mac_uJ={rep['energy_mac_j']*1e6:.2f};"
          f"noc_uJ={rep['energy_noc_j']*1e6:.3f};"
-         f"peak_link={rep['peak_link_load']:.0f}")
+         f"peak_link_flits={rep['peak_link_flits']:.0f};"
+         f"perPE_dvfs_mW={tab['per_pe']['dvfs']['total']:.1f}")
 
+    # hybrid NEF -> event-MAC: graded spike-vector payloads over the mesh
     t0 = time.perf_counter()
-    h = hybrid_workload(n_ticks=600)
+    h = jax.block_until_ready(hybrid_workload(n_ticks=600))
     us = (time.perf_counter() - t0) * 1e6
-    emit("chip_hybrid_nef_mlp", us,
+    conserved = int(np.array_equal(h["graded_bits_out"][:-1],
+                                   h["graded_bits_in"][1:]))
+    emit("chip_hybrid_program", us,
          f"rmse={h['rmse']:.3f};event_vs_frame={h['event_vs_frame']:.4f};"
-         f"spikes={h['total_spikes']:.0f};"
+         f"spikes={h['total_spikes']:.0f};duty={h['duty_cycle']:.3f};"
          f"pj_per_eq_synop={h['synops']['pj_per_eq_synop']:.1f};"
-         f"noc_nJ={h['energy_noc_j']*1e9:.2f}")
+         f"noc_nJ={h['energy_noc_j']*1e9:.2f};"
+         f"payload_conserved={conserved}")
 
 
 if __name__ == "__main__":

@@ -1,19 +1,37 @@
 """Chip-level mesh simulator (paper Sec. III-A/B scaled out).
 
-Composes the per-PE models (core/) into a full W x H QPE mesh:
+Unified workload API: declare any SNN / DNN / hybrid workload as a
+``NetGraph`` (populations + typed spike/graded projections), compile it to
+a ``ChipProgram`` (SRAM-constrained placement, routing tables, multicast
+link-incidence tensors), and run it on the ONE workload-agnostic engine:
 
+    graph = workloads.synfire_graph(8)          # or dnn_graph / hybrid_graph
+    prog  = compile(graph)                      # placement + routing + NoC
+    sim   = ChipSim(prog)
+    recs  = sim.run(n_ticks=1200)               # one lax.scan, all PEs
+    table = chip_power_table(sim, recs)         # Table III at chip scale
+
+Modules:
+
+* ``graph``     — ``NetGraph`` / ``Population`` / ``Projection`` and the
+  ``TickSemantics`` contract (per-tick step, packets, Eq. (1) energies).
+* ``compile``   — graph -> ``ChipProgram`` lowering with clear capacity /
+  SRAM errors.
 * ``mesh_noc``  — link enumeration, X/Y multicast-tree incidence tensors,
-  vectorized per-tick link-load / latency / energy accounting.
-* ``mapping``   — SRAM-constrained placement of neuron populations and DNN
-  layer tiles onto PEs; emits routing tables + incidence tensors.
-* ``chip``      — ``ChipSim``: all PEs vectorized in one ``lax.scan`` with
+  vectorized per-tick accounting for spike AND graded multi-flit packets.
+* ``mapping``   — the shared snake-order placement primitive plus the
+  legacy direct placers (``place_ring``/``place_layers``).
+* ``chip``      — ``ChipSim``: runs any program in one ``lax.scan`` with
   per-PE activity-driven DVFS and chip-level power tables.
-* ``workloads`` — scenario builders: synfire ring of any length, tiled
-  feedforward DNN, hybrid NEF + event-driven-MAC pipeline.
+* ``workloads`` — graph builders: synfire ring of any length, tiled
+  feedforward DNN pipeline, hybrid NEF + event-driven-MAC pipeline.
 """
 from repro.chip.mesh_noc import MeshNoc, MeshSpec
 from repro.chip.mapping import Placement, place_ring, place_layers
+from repro.chip.graph import NetGraph, Population, Projection
+from repro.chip.compile import ChipProgram, compile
 from repro.chip.chip import ChipSim, chip_power_table
 
 __all__ = ["MeshNoc", "MeshSpec", "Placement", "place_ring", "place_layers",
+           "NetGraph", "Population", "Projection", "ChipProgram", "compile",
            "ChipSim", "chip_power_table"]

@@ -1,12 +1,17 @@
-"""``ChipSim`` — a virtual SpiNNaker2 chip: W x H QPE mesh of PEs runs a
-spiking workload in one ``jax.lax.scan`` over 1 ms ticks.
+"""``ChipSim`` — the workload-agnostic chip engine.
 
-All PEs advance together as batched axes of the same arrays (the per-PE
-models in core/snn.py are already (P, ...)-vectorized); what the chip
-level adds per tick is the NoC: each PE's spike-packet count hits its
-precomputed multicast-tree incidence row, one einsum yields per-link
-loads, and the energy/congestion/latency accounting follows from
-``NocSpec`` — no per-source Python in the hot path.
+A virtual SpiNNaker2 chip: W x H QPE mesh of PEs running any compiled
+``ChipProgram`` (SNN, DNN or hybrid — see ``repro.chip.graph`` /
+``repro.chip.compile``) in one ``jax.lax.scan`` over 1 ms ticks.
+
+The program's ``TickSemantics`` advances all PEs as batched axes of the
+same arrays and reports per-PE activity (packets emitted, performance
+level, Eq. (1) energy split); what the engine adds per tick is the NoC:
+each source's packet count hits its precomputed multicast-tree incidence
+row, one einsum yields per-link loads — in packets AND in DNoC flits, so
+graded-payload (multi-flit) packets are priced correctly — and the
+energy/congestion accounting follows from ``NocSpec``.  No per-source
+Python in the hot path, no per-workload branches in the engine.
 
 ``chip_power_table`` generalizes ``synfire_power_table`` from one PE
 average to the whole chip: per-PE table + chip totals + NoC power + the
@@ -15,72 +20,86 @@ SpiNNCer-style peak-link-load bottleneck check.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.chip.mapping import Placement, place_ring
+from repro.chip.compile import ChipProgram
 from repro.chip.mesh_noc import MeshNoc, MeshSpec, SPIKE_PACKET_BITS
-from repro.configs import paper
 from repro.core.dvfs import DVFSController
 from repro.core.energy import PEEnergyModel
-from repro.core.snn import (SynfireNet, build_synfire, make_synfire_tick,
-                            synfire_init_state, synfire_power_table)
 
 
 @dataclass
 class ChipSim:
-    """A placed spiking workload on a full PE mesh."""
-    net: SynfireNet
-    placement: Placement
-    dvfs: DVFSController = None
+    """A compiled workload program on a full PE mesh."""
+    program: ChipProgram
+    dvfs: Optional[DVFSController] = None
     em: PEEnergyModel = field(default_factory=PEEnergyModel)
 
     def __post_init__(self):
         if self.dvfs is None:
-            sp = self.net.params
-            self.dvfs = DVFSController(sp.l_th1, sp.l_th2)
-        assert self.net.params.n_pes == self.placement.n_pes
+            # workload semantics may carry their own FIFO thresholds (e.g.
+            # a synfire net built with custom l_th1/l_th2); fall back to
+            # the paper's Table II defaults
+            sem = self.program.graph.semantics
+            make = getattr(sem, "dvfs_controller", None)
+            self.dvfs = make() if make else DVFSController()
 
     @property
     def noc(self) -> MeshNoc:
-        return self.placement.noc
+        return self.program.noc
 
     @staticmethod
     def synfire(n_pes: int = 8, mesh: MeshSpec | None = None, seed: int = 0,
                 **build_kw) -> "ChipSim":
-        """Synfire ring of any length placed on a QPE mesh.  With the
-        default 8 PEs this is exactly the paper's test-chip benchmark."""
-        net = build_synfire(seed, n_pes=n_pes, **build_kw)
-        return ChipSim(net=net, placement=place_ring(n_pes, mesh))
+        """DEPRECATED shim: build + compile a synfire ring in one call.
+
+        New code should go through the graph API
+        (``workloads.synfire_graph`` -> ``compile`` -> ``ChipSim``); this
+        constructor survives for the existing call sites and stays
+        bit-identical to the paper's 8-PE test-chip benchmark.
+        """
+        from repro.chip.compile import compile as compile_graph
+        from repro.chip.workloads import synfire_graph
+        graph = synfire_graph(n_pes=n_pes, seed=seed, **build_kw)
+        return ChipSim(program=compile_graph(graph, mesh))
 
     def run(self, n_ticks: int, seed: int = 1) -> dict:
-        """Per-tick records: everything ``simulate_synfire`` returns, plus
+        """Per-tick records: everything the program's semantics reports
+        (spike rasters / layer occupancy / decoded signals, PLs, Eq. (1)
+        energies), plus the engine's NoC accounting:
 
-        link_load  (T, n_links) — spike packets per link per tick
-        e_noc      (T,)         — NoC spike-traffic energy per tick [J]
+        link_load  (T, n_links) — packets per link per tick
+        link_flits (T, n_links) — DNoC flits per link per tick (graded
+                                  multi-flit packets weigh more)
+        e_noc      (T,)         — NoC traffic energy per tick [J]
 
-        The neuron dynamics are the SAME tick function the single-chip
-        path scans (make_synfire_tick), so an 8-PE ChipSim reproduces
-        ``simulate_synfire`` rasters bit for bit.
+        For the synfire program the neuron dynamics are the SAME tick
+        function the single-chip path scans (``make_synfire_tick``), so an
+        8-PE ChipSim reproduces ``simulate_synfire`` rasters bit for bit.
         """
-        tick = make_synfire_tick(self.net, dvfs=self.dvfs, em=self.em,
-                                 key=jax.random.PRNGKey(seed))
-        inc = jnp.asarray(self.placement.inc)
+        prog = self.program
+        tick = prog.make_tick(dvfs=self.dvfs, em=self.em,
+                              key=jax.random.PRNGKey(seed))
+        inc = jnp.asarray(prog.inc)
+        tree_links = inc.sum(axis=1)                    # (P,)
+        static_pb = jnp.asarray(prog.payload_bits)
         noc = self.noc
 
         def chip_tick(state, t):
             state, rec = tick(state, t)
-            # each spiking exc neuron emits one multicast packet; the tree
-            # is fixed per source PE, so per-link load is a dense matmul
-            packets = rec["spikes_exc"].astype(jnp.int32).sum(axis=1)  # (P,)
-            loads = noc.link_loads(packets, inc)                       # (L,)
+            packets = rec["packets"].astype(jnp.float32)    # (P,)
+            pb = rec.get("payload_bits", static_pb)
+            loads = noc.link_loads(packets, inc)            # (L,)
             rec["link_load"] = loads
-            rec["e_noc"] = noc.spike_energy_j(loads)
+            rec["link_flits"] = noc.flit_loads(packets, inc, pb)
+            rec["e_noc"] = noc.traffic_energy_j(packets, tree_links, pb)
             return state, rec
 
-        _, recs = jax.lax.scan(chip_tick, synfire_init_state(self.net),
+        _, recs = jax.lax.scan(chip_tick, prog.init_state(),
                                jnp.arange(n_ticks))
         return recs
 
@@ -89,31 +108,39 @@ def chip_power_table(sim: ChipSim, recs: dict,
                      t_sys_s: float = 1e-3) -> dict:
     """Chip-level generalization of ``synfire_power_table``.
 
-    per_pe     — the paper's Table III numbers (averaged over all PEs)
+    per_pe     — the paper's Table III split (averaged over all PEs)
     chip       — the same, summed over the mesh [mW]
-    noc        — average NoC power [mW], peak link load [packets/tick],
-                 link utilization vs. capacity, worst multicast hop depth
+    noc        — average NoC power [mW], peak link load [packets/tick] and
+                 [flits/tick], link utilization vs. capacity, worst
+                 multicast hop depth
     """
+    from repro.core.snn import synfire_power_table
     per_pe = synfire_power_table(recs, t_sys_s=t_sys_s)
-    P = sim.placement.n_pes
+    P = sim.program.n_pes
     chip = {mode: {k: v * P for k, v in per_pe[mode].items()}
             for mode in ("dvfs", "pl3")}
 
     loads = np.asarray(recs["link_load"])                  # (T, L)
+    flits = np.asarray(recs.get("link_flits", loads))
     e_noc = np.asarray(recs["e_noc"])
     peak = float(sim.noc.congestion(loads).max()) if loads.size else 0.0
+    peak_flits = float(sim.noc.congestion(flits).max()) if flits.size else 0.0
     cap = sim.noc.link_capacity_packets(t_sys_s, SPIKE_PACKET_BITS)
+    # flit capacity: one flit per hop_cycles at the NoC clock
+    cap_flits = t_sys_s * sim.noc.spec.freq_hz / sim.noc.spec.hop_cycles
     noc = {
         "power_mw": float(e_noc.mean() / t_sys_s * 1e3),
         "peak_link_load": peak,
         "mean_link_load": float(loads.mean()) if loads.size else 0.0,
-        "link_capacity": cap,
-        "peak_utilization": peak / cap,
-        "worst_tree_hops": sim.placement.worst_tree_hops,
+        "peak_link_flits": peak_flits,
+        "link_capacity": cap,                 # spike packets / tick
+        "link_capacity_flits": cap_flits,     # basis of peak_utilization
+        "peak_utilization": peak_flits / cap_flits,
+        "worst_tree_hops": sim.program.worst_tree_hops,
         "worst_hop_latency_s": sim.noc.hop_latency_s(
-            sim.placement.worst_tree_hops),
+            sim.program.worst_tree_hops),
         "n_links": sim.noc.n_links,
     }
     return {"per_pe": per_pe, "chip": chip, "noc": noc,
-            "n_pes": P, "mesh": (sim.placement.mesh.width,
-                                 sim.placement.mesh.height)}
+            "n_pes": P, "mesh": (sim.program.mesh.width,
+                                 sim.program.mesh.height)}

@@ -35,6 +35,15 @@ def snake_order(mesh: MeshSpec) -> list[int]:
     return order
 
 
+def snake_coords(mesh: MeshSpec, slots) -> np.ndarray:
+    """(len(slots), 2) QPE coords of placement slots in snake order —
+    the shared placement primitive of ``place_ring``/``place_layers`` and
+    the graph compiler (``repro.chip.compile``)."""
+    qpe_order = snake_order(mesh)
+    return np.array([mesh.qpe_coord(qpe_order[s // mesh.pes_per_qpe])
+                     for s in slots], np.int32)
+
+
 @dataclass
 class Placement:
     """Where each logical PE of a workload lives, how its spikes route,
@@ -90,10 +99,7 @@ def place_ring(n_pes: int, mesh: MeshSpec | None = None,
     if not pe.fits_sram(sram):
         raise ValueError(f"synfire core state {sram} B exceeds PE SRAM")
 
-    qpe_order = snake_order(mesh)
-    coords = np.array(
-        [mesh.qpe_coord(qpe_order[i // mesh.pes_per_qpe])
-         for i in range(n_pes)], np.int32)
+    coords = snake_coords(mesh, range(n_pes))
     table = RoutingTable.ring(n_pes)
     noc = MeshNoc(mesh)
     inc = _incidence_from_table(noc, coords, table)
@@ -152,10 +158,7 @@ def place_layers(layers: list[dict], mesh: MeshSpec | None = None,
     mesh = mesh or MeshSpec.for_pes(total_tiles)
     if total_tiles > mesh.n_pes:
         raise ValueError(f"{total_tiles} tiles > mesh capacity {mesh.n_pes}")
-    qpe_order = snake_order(mesh)
-    coords = np.array(
-        [mesh.qpe_coord(qpe_order[i // mesh.pes_per_qpe])
-         for i in range(total_tiles)], np.int32)
+    coords = snake_coords(mesh, range(total_tiles))
 
     # routing: every tile of layer i multicasts its activations to every
     # tile of layer i+1 (dense feedforward halo)

@@ -118,6 +118,39 @@ class MeshNoc:
         return (loads.sum(axis=-1) * SPIKE_PACKET_BITS
                 * self.spec.pj_per_bit_hop * 1e-12)
 
+    # -- typed packet classes (graded payloads over the DNoC) --------------
+
+    def packet_flits(self, payload_bits) -> jnp.ndarray:
+        """Flits per packet given per-source payload bits (0 = header-only
+        spike packet = 1 flit; graded = ceil(bits / 128) flits)."""
+        pb = jnp.asarray(payload_bits)
+        return jnp.where(pb > 0, -(-pb // self.spec.payload_bits), 1)
+
+    def packet_bits(self, payload_bits) -> jnp.ndarray:
+        """Bits on the wire per link traversal of one packet: 64 b for a
+        spike packet, ceil(bits/128) flits of 192 b for graded payloads."""
+        pb = jnp.asarray(payload_bits)
+        return jnp.where(pb > 0, self.packet_flits(pb) * self.spec.flit_bits,
+                         SPIKE_PACKET_BITS)
+
+    def flit_loads(self, packets, inc, payload_bits) -> jnp.ndarray:
+        """Per-link flit traffic: each source's packets weighted by its
+        packet's flit count before hitting the incidence tensor."""
+        w = packets.astype(jnp.float32) * self.packet_flits(payload_bits)
+        return jnp.einsum("...p,pl->...l", w, jnp.asarray(inc))
+
+    def traffic_energy_j(self, packets, tree_links, payload_bits):
+        """Energy of one tick's multicast traffic, packet-class aware.
+
+        packets (..., P) packets emitted per source; tree_links (P,) link
+        count of each source's multicast tree (= inc.sum(axis=1));
+        payload_bits (..., P) or (P,).  Spike packets cost 64 b per link
+        traversal, graded packets cost their flit footprint.
+        """
+        bits = (packets.astype(jnp.float32) * jnp.asarray(tree_links)
+                * self.packet_bits(payload_bits))
+        return bits.sum(axis=-1) * self.spec.pj_per_bit_hop * 1e-12
+
     def payload_energy_j(self, loads, payload_bits) -> jnp.ndarray:
         """Energy of payload packets: each traversal moves ceil(bits/128)
         DNoC flits of 192 bits."""

@@ -42,6 +42,20 @@ def event_mac(values, active, wq, w_scale, *, capacity=None, interpret=True):
     return out[:T], jnp.sum(active.astype(jnp.int32))
 
 
+def event_mac_tick(spikes, w_eff):
+    """One tick of the event-triggered MAC: accumulate one weight row per
+    spiking input ("graded weight x activity-related input", Sec. II).
+
+    spikes: (K,) 0/1 event vector arriving this tick; w_eff: (K, N) f32
+    dequantized weights.  Returns (out (N,), n_events) — ticks with no
+    events produce exact zeros and dispatch nothing, which is what the
+    per-tick chip engine (repro.chip) prices: energy follows activity.
+    """
+    s = spikes.astype(jnp.float32)
+    n_events = s.sum().astype(jnp.int32)
+    return s @ w_eff, n_events
+
+
 def event_mac_energy_j(n_events, k, n, *, tops_per_w=None):
     """Energy of event-triggered MAC ops from the paper's measured
     efficiency (Fig. 15: 1.47 TOPS/W at PL2, x1.56 hardware bug factor)."""

@@ -20,6 +20,7 @@ Energy accounting implements BOTH of the paper's synaptic-event metrics:
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,8 +46,8 @@ class Ensemble:
     lif: dict
     tau_syn_ticks: float = 20.0
     # int8 MAC-path operands
-    enc_q: np.ndarray = None   # (D, N) int8
-    enc_scale: np.ndarray = None
+    enc_q: Optional[np.ndarray] = None   # (D, N) int8
+    enc_scale: Optional[np.ndarray] = None
 
 
 def _lif_rate(J, tau_ref=0.002, tau_rc=0.02):
@@ -85,6 +86,27 @@ def build_ensemble(n_neurons=512, dims=1, seed=0, tau_ms=20.0,
                     enc_q=np.asarray(enc_q), enc_scale=np.asarray(enc_scale))
 
 
+def encode_drive(ens: Ensemble, x_seq, *, use_mac=True) -> jnp.ndarray:
+    """(T, D) inputs -> (T, N) s16.15 per-tick membrane drive.
+
+    Encoding runs through the int8 MAC array (Fig. 19 left); the result is
+    the exact discretization of dv/dt = (J - v)/tau_rc:  v' = a v + (1-a) J.
+    Shared by ``run_channel`` and the chip-level hybrid workload
+    (``repro.chip.workloads.hybrid_graph``) so both paths stay equivalent.
+    """
+    xq, x_scale = quantize_per_axis(jnp.asarray(x_seq, jnp.float32), axis=1)
+    if use_mac:
+        acc = mac_gemm(xq, jnp.asarray(ens.enc_q))       # (T, N) int32
+        J = (acc.astype(jnp.float32) * x_scale[:, None]
+             * jnp.asarray(ens.enc_scale)[None, :])
+    else:
+        J = jnp.asarray(x_seq, jnp.float32) @ jnp.asarray(
+            ens.gains[:, None] * ens.encoders, jnp.float32).T
+    J = J + jnp.asarray(ens.biases, jnp.float32)[None, :]
+    alpha = ens.lif["alpha"] / FX_ONE
+    return jnp.round(J * (1.0 - alpha) * FX_ONE).astype(jnp.int32)
+
+
 def run_channel(ens: Ensemble, x_seq: np.ndarray, *, dt_ms=1.0,
                 use_mac=True, seed=0):
     """Communication channel: decoded output follows the input vector.
@@ -96,25 +118,9 @@ def run_channel(ens: Ensemble, x_seq: np.ndarray, *, dt_ms=1.0,
     """
     T, D = x_seq.shape
     N = ens.n_neurons
-    enc_q = jnp.asarray(ens.enc_q)
-    enc_scale = jnp.asarray(ens.enc_scale)
-    biases = jnp.asarray(ens.biases, jnp.float32)
     dec = jnp.asarray(ens.decoders, jnp.float32)
     alpha_syn = float(np.exp(-1.0 / ens.tau_syn_ticks))
-
-    # --- encode all inputs through the int8 MAC array (Fig. 19 left) ------
-    xq, x_scale = quantize_per_axis(jnp.asarray(x_seq, jnp.float32), axis=1)
-    if use_mac:
-        acc = mac_gemm(xq, enc_q)                        # (T, N) int32
-        J = acc.astype(jnp.float32) * x_scale[:, None] * enc_scale[None, :]
-    else:
-        J = jnp.asarray(x_seq, jnp.float32) @ jnp.asarray(
-            ens.gains[:, None] * ens.encoders, jnp.float32).T
-    J = J + biases[None, :]
-
-    # exact discretization of dv/dt = (J - v)/tau_rc:  v' = a v + (1-a) J
-    alpha = ens.lif["alpha"] / FX_ONE
-    drive_fx = jnp.round(J * (1.0 - alpha) * FX_ONE).astype(jnp.int32)
+    drive_fx = encode_drive(ens, x_seq, use_mac=use_mac)
 
     def tick(state, inp):
         v, ref, xhat = state

@@ -158,6 +158,10 @@ def make_synfire_tick(net: SynfireNet, *, dvfs: DVFSController,
         new_state = {"v": v, "ref": ref, "exc_buf": exc_buf, "inh_buf": inh_buf}
         rec = {
             "pl": pl, "n_fifo": n_fifo, "syn_events": syn_events,
+            # one multicast DNoC packet per spiking exc neuron — the NoC
+            # source counts the chip engine prices against the incidence
+            # tensor (repro.chip.chip.ChipSim)
+            "packets": spk_exc.astype(jnp.int32).sum(axis=1),
             "spikes_exc": spk_exc.astype(jnp.int8),
             "spikes_inh": spk_inh.astype(jnp.int8),
             "e_dvfs_baseline": e_dvfs["baseline"],
@@ -201,7 +205,9 @@ def synfire_power_table(recs, t_sys_s: float = 1e-3) -> dict:
         out[mode] = {"baseline": base, "neuron": neur, "synapse": syn,
                      "total": base + neur + syn}
     out["reduction"] = {
-        k: 1.0 - out["dvfs"][k] / out["pl3"][k]
+        # a workload may not exercise a component (e.g. the DNN pipeline
+        # has no neuron updates): no PL3 energy -> no reduction to report
+        k: (1.0 - out["dvfs"][k] / out["pl3"][k]) if out["pl3"][k] else 0.0
         for k in ("baseline", "neuron", "synapse", "total")
     }
     return out

@@ -1,0 +1,242 @@
+"""Dry-run cells: one (architecture x shape) combination = one ``Cell``.
+
+A cell packages everything ``jax.jit(...).lower(...).compile()`` needs to
+prove a step function against a production mesh WITHOUT real weights:
+
+    cell = make_cell(cfg, shape, mesh)
+    jax.jit(cell.fn, in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums).lower(*cell.args).compile()
+
+``cell.args`` are abstract ``ShapeDtypeStruct`` trees, so lowering a 42B
+config costs graph construction only.  Shardings come from the logical-axis
+tables in ``repro.dist.sharding``: parameters (and their AdamW moments —
+ZeRO) through ``PARAM_RULES``, batches over the data axes, KV caches via
+``cache_spec``.  This mirrors the SpiNNaker2 mapping problem one level up:
+``repro.chip.compile`` places population tiles on PEs, ``make_cell`` places
+tensor dims on mesh axes.
+
+Used by ``repro.launch.dryrun`` (the full grid), ``scripts/diag_cell.py``
+and ``scripts/hillclimb.py`` (single-cell iteration).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as SH
+from repro.models import transformer as T
+from repro.train.step import (make_decode_step, make_prefill_step,
+                              make_train_step)
+
+# per-arch gradient-accumulation override (scripts/hillclimb.py pokes this)
+TRAIN_MICROBATCH: dict[str, int] = {}
+
+
+@dataclass(frozen=True)
+class Cell:
+    """A jit-ready step closure plus its abstract args and shardings."""
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+
+# ---------------------------------------------------------------------------
+# Sharding resolution
+# ---------------------------------------------------------------------------
+
+def _param_shardings(cfg, mesh, rules=None):
+    """Parameter tree -> NamedSharding tree via the logical-axis tables.
+
+    Each PSpec leaf carries logical dim names (repro.models.layers); they
+    resolve greedily through ``rules`` (default ``SH.PARAM_RULES``) with
+    divisibility checks, so any mesh — including a (1, 1) elastic-restore
+    mesh — yields a valid placement.
+    """
+    if rules is None:
+        rules = SH.PARAM_RULES
+    shapes = T.abstract_params(cfg)
+    axes = T.param_logical_axes(cfg)
+    flat_s, treedef = jax.tree.flatten(shapes)
+    flat_a = treedef.flatten_up_to(axes)
+    shards = [NamedSharding(mesh, SH.spec_for(s.shape, a, mesh, rules=rules))
+              for s, a in zip(flat_s, flat_a)]
+    return jax.tree.unflatten(treedef, shards)
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _dim_spec(shape, mesh, wants: dict) -> P:
+    """PartitionSpec sharding dim i over wants[i] when divisible."""
+    entries: list = [None] * len(shape)
+    used: set = set()
+    for d, ax in wants.items():
+        if (ax in mesh.shape and ax not in used and shape[d] > 1
+                and shape[d] % mesh.shape[ax] == 0):
+            entries[d] = ax
+            used.add(ax)
+    return P(*entries)
+
+
+def _cache_shardings(cfg, batch, max_seq, mesh, dtype=jnp.bfloat16):
+    """Sharding tree parallel to ``transformer.cache_specs``."""
+    def attn_like(kind, off):
+        S = (min(max_seq, cfg.window_size)
+             if kind == "local" and cfg.window_size else max_seq)
+        shape = (cfg.num_groups,) * off + (batch, S, cfg.num_kv_heads,
+                                           cfg.head_dim)
+        ns = NamedSharding(mesh, SH.cache_spec(
+            shape, mesh, batch_dim=off, seq_dim=off + 1, kv_dim=off + 2))
+        return {"k": ns, "v": ns}
+
+    def block(kind, off):
+        if kind in ("attn", "local"):
+            return attn_like(kind, off)
+        if kind == "rglru":
+            w = cfg.lru_width or cfg.d_model
+            conv = (cfg.num_groups,) * off + (batch, cfg.conv_width - 1, w)
+            state = (cfg.num_groups,) * off + (batch, w)
+            return {
+                "conv": NamedSharding(mesh, _dim_spec(
+                    conv, mesh, {off: "data", off + 2: "model"})),
+                "state": NamedSharding(mesh, _dim_spec(
+                    state, mesh, {off: "data", off + 1: "model"})),
+            }
+        if kind == "rwkv":
+            d = cfg.d_model
+            H = d // cfg.rwkv_head_size
+            shift = (cfg.num_groups,) * off + (batch, 1, d)
+            state = (cfg.num_groups,) * off + (batch, H,
+                                               cfg.rwkv_head_size,
+                                               cfg.rwkv_head_size)
+            shift_ns = NamedSharding(mesh, _dim_spec(
+                shift, mesh, {off: "data", off + 2: "model"}))
+            return {
+                "tmix": {"shift": shift_ns,
+                         "state": NamedSharding(mesh, _dim_spec(
+                             state, mesh, {off: "data", off + 1: "model"}))},
+                "cmix": {"shift": shift_ns},
+            }
+        raise ValueError(kind)
+
+    return {
+        "groups": [block(kind, 1) for kind in cfg.layer_pattern],
+        "rem": [block(kind, 0) for kind in cfg.rem_layers],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def _abstract_batch(cfg, shape, *, kind: str):
+    """ShapeDtypeStruct batch + its data-parallel shardings."""
+    B = shape.global_batch
+    if kind == "train":
+        S = shape.seq_len
+        if cfg.frontend == "none":
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S + 1), jnp.int32)}
+        else:
+            # modality frontends are stubbed: the backbone sees frames +
+            # per-codebook labels (repro.models.transformer.train_loss)
+            batch = {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((B, S, cfg.num_codebooks),
+                                               jnp.int32),
+            }
+    else:
+        S = shape.seq_len if kind == "prefill" else 1
+        if cfg.frontend == "none":
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        else:
+            batch = {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                    jnp.bfloat16)}
+    return batch
+
+
+def _batch_shardings(batch, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, SH.data_spec(s.shape, mesh)), batch)
+
+
+def _opt_abstract(params_abs):
+    return {"mu": params_abs, "nu": params_abs,
+            "count": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Cells
+# ---------------------------------------------------------------------------
+
+def _train_cell(cfg, shape, mesh) -> Cell:
+    params_abs = T.abstract_params(cfg)
+    pshard = _param_shardings(cfg, mesh)
+    batch = _abstract_batch(cfg, shape, kind="train")
+    fn = make_train_step(
+        cfg, microbatch=TRAIN_MICROBATCH.get(cfg.name, 1), mesh=mesh)
+    args = (params_abs, _opt_abstract(params_abs), batch,
+            jax.ShapeDtypeStruct((), jnp.int32))
+    oshard = {"mu": pshard, "nu": pshard, "count": _replicated(mesh)}
+    metrics = _replicated(mesh)
+    return Cell(
+        fn=fn, args=args,
+        in_shardings=(pshard, oshard, _batch_shardings(batch, mesh),
+                      _replicated(mesh)),
+        out_shardings=(pshard, oshard, metrics),
+        donate_argnums=(0, 1),
+    )
+
+
+def _prefill_cell(cfg, shape, mesh) -> Cell:
+    params_abs = T.abstract_params(cfg)
+    pshard = _param_shardings(cfg, mesh)
+    batch = _abstract_batch(cfg, shape, kind="prefill")
+    max_seq = shape.seq_len
+    fn = make_prefill_step(cfg, max_seq, mesh=mesh)
+    cshard = _cache_shardings(cfg, shape.global_batch, max_seq, mesh)
+    return Cell(
+        fn=fn, args=(params_abs, batch),
+        in_shardings=(pshard, _batch_shardings(batch, mesh)),
+        out_shardings=(_replicated(mesh), cshard),
+        donate_argnums=(),
+    )
+
+
+def _decode_cell(cfg, shape, mesh) -> Cell:
+    params_abs = T.abstract_params(cfg)
+    pshard = _param_shardings(cfg, mesh)
+    batch = _abstract_batch(cfg, shape, kind="decode")
+    max_seq = shape.seq_len
+    caches_abs = T.cache_specs(cfg, shape.global_batch, max_seq)
+    cshard = _cache_shardings(cfg, shape.global_batch, max_seq, mesh)
+    fn = make_decode_step(cfg, mesh=mesh)
+    return Cell(
+        fn=fn,
+        args=(params_abs, caches_abs, jax.ShapeDtypeStruct((), jnp.int32),
+              batch),
+        in_shardings=(pshard, cshard, _replicated(mesh),
+                      _batch_shardings(batch, mesh)),
+        out_shardings=(_replicated(mesh), cshard),
+        donate_argnums=(1,),
+    )
+
+
+def make_cell(cfg, shape, mesh) -> Cell:
+    """Build the (arch x shape) dry-run cell for ``mesh``."""
+    kind = shape.kind
+    if kind == "train":
+        return _train_cell(cfg, shape, mesh)
+    if kind == "prefill":
+        return _prefill_cell(cfg, shape, mesh)
+    if kind == "decode":
+        return _decode_cell(cfg, shape, mesh)
+    raise ValueError(f"unknown shape kind {kind!r}")

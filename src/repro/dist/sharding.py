@@ -25,6 +25,22 @@ RULES: dict[str, tuple[str, ...]] = {
     "expert": ("model", "data"),
 }
 
+# Parameter placement (train cells): FSDP over "data" on the embed dim,
+# tensor-parallel over "model" on the contraction-free dim, layer-stack
+# and small table dims replicated.  ``repro.dist.cells._param_shardings``
+# resolves each PSpec's logical axes through this table.
+PARAM_RULES: dict[str, tuple[str, ...]] = {
+    "embed": ("data",),
+    "vocab": ("model", "data"),
+    "heads": ("model",),
+    "kv": ("model",),
+    "mlp": ("model",),
+    "expert": ("model", "data"),
+    "layer": (),
+    "vocab_tbl": (),
+    "embed_tbl": ("model",),
+}
+
 
 def _axis_size(mesh, axes) -> int:
     """Product of the mesh extents of ``axes`` (str or iterable of str)."""
@@ -36,17 +52,20 @@ def _axis_size(mesh, axes) -> int:
     return n
 
 
-def spec_for(shape, names, mesh) -> P:
+def spec_for(shape, names, mesh, rules=None) -> P:
     """Resolve (shape, logical names) -> PartitionSpec over ``mesh``.
 
     Greedy, never reuses a mesh axis, and only shards a dim whose size is
-    divisible by the axis extent.
+    divisible by the axis extent.  ``rules`` defaults to the activation
+    table ``RULES``; pass ``PARAM_RULES`` for parameter placement.
     """
+    if rules is None:
+        rules = RULES
     used: set[str] = set()
     entries = []
     for dim, name in zip(shape, names):
         pick = None
-        for ax in RULES.get(name, ()):
+        for ax in rules.get(name, ()):
             if ax in used or ax not in mesh.shape:
                 continue
             if dim % mesh.shape[ax] == 0:

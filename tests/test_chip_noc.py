@@ -73,6 +73,46 @@ def test_tick_batched_loads_shape():
     assert noc.link_loads(packets, inc).shape == (7, noc.n_links)
 
 
+def test_graded_packet_flits_and_bits():
+    """Typed packet classes: payload 0 = header-only spike (1 flit, 64 b);
+    graded payloads price as ceil(bits/128) flits of 192 b."""
+    noc = MeshNoc(MeshSpec(2, 2))
+    pb = jnp.asarray([0, 1, 128, 129, 4096])
+    np.testing.assert_array_equal(noc.packet_flits(pb), [1, 1, 1, 2, 32])
+    np.testing.assert_array_equal(
+        noc.packet_bits(pb), [64, 192, 192, 384, 32 * 192])
+
+
+def test_graded_traffic_energy_matches_core_noc_model():
+    """Packet-class-aware energy == core NocModel payload pricing."""
+    noc = MeshNoc(MeshSpec(4, 4))
+    m = NocModel(noc.spec)
+    src, dsts = (0, 0), [(3, 1), (3, 2), (1, 3)]
+    inc = noc.incidence_row(src, dsts)[None]
+    tree_links = inc.sum(axis=1)
+    for payload in (16, 500, 4096):
+        got = float(noc.traffic_energy_j(
+            jnp.asarray([1.0]), tree_links, jnp.asarray([payload])))
+        np.testing.assert_allclose(
+            got, m.payload_energy_j(src, dsts, payload), rtol=1e-5)
+    # payload 0 degrades to the spike-packet price
+    got = float(noc.traffic_energy_j(jnp.asarray([1.0]), tree_links,
+                                     jnp.asarray([0])))
+    np.testing.assert_allclose(got, m.spike_energy_j(src, dsts), rtol=1e-5)
+
+
+def test_flit_loads_weigh_multiflit_packets():
+    noc = MeshNoc(MeshSpec(3, 1))
+    inc = noc.incidence([(0, 0), (2, 0)], [[(2, 0)], [(0, 0)]])
+    packets = jnp.asarray([2.0, 1.0])
+    pb = jnp.asarray([0, 300])              # spike vs 3-flit graded
+    flits = np.asarray(noc.flit_loads(packets, inc, pb))
+    loads = np.asarray(noc.link_loads(packets, inc))
+    # graded source contributes 3x its packet count in flits
+    np.testing.assert_allclose(flits.sum(), 2 * 2 + 1 * 3 * 2)
+    np.testing.assert_allclose(loads.sum(), 2 * 2 + 1 * 2)
+
+
 def test_capacity_and_latency_scales():
     noc = MeshNoc(MeshSpec(4, 4))
     # 64 b packet = 1 flit, 5 cycles/hop @ 400 MHz

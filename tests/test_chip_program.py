@@ -1,0 +1,181 @@
+"""Unified workload API: graph -> compile -> ChipProgram -> ChipSim.
+
+Golden acceptance: the compiled 8-PE synfire program reproduces the seed
+``simulate_synfire`` bit for bit; the hybrid graph conserves graded-event
+payload across the NoC; the compiler rejects oversized graphs with clear
+errors instead of failing deep inside placement.
+"""
+import numpy as np
+import pytest
+
+from repro.chip.chip import ChipSim, chip_power_table
+from repro.chip.compile import compile as compile_graph
+from repro.chip.graph import (GRADED, NetGraph, Population, Projection,
+                              SPIKE)
+from repro.chip.mapping import place_ring
+from repro.chip.mesh_noc import MeshSpec
+from repro.chip.workloads import (dnn_graph, hybrid_graph, hybrid_workload,
+                                  synfire_graph)
+from repro.core.snn import build_synfire, simulate_synfire
+
+
+# -------------------------------------------------------------------------
+# Golden: compiled synfire == seed single-chip simulation, bit for bit
+# -------------------------------------------------------------------------
+
+def test_compiled_synfire_program_bit_identical_to_seed():
+    graph = synfire_graph(8, seed=0)
+    prog = compile_graph(graph)
+    sim = ChipSim(prog)
+    recs = sim.run(300)
+    ref = simulate_synfire(build_synfire(0), 300)
+    for k in ("spikes_exc", "spikes_inh", "pl", "n_fifo", "syn_events",
+              "packets"):
+        assert np.array_equal(np.asarray(recs[k]), np.asarray(ref[k])), k
+
+
+def test_compiled_synfire_placement_matches_place_ring():
+    """The graph compiler generalizes place_ring: same mesh, same snake
+    coords, same routing masks, same incidence tensor."""
+    for n_pes in (8, 24):
+        prog = compile_graph(synfire_graph(n_pes))
+        pl = place_ring(n_pes)
+        assert (prog.mesh.width, prog.mesh.height) == \
+            (pl.mesh.width, pl.mesh.height)
+        np.testing.assert_array_equal(prog.coords, pl.coords)
+        np.testing.assert_array_equal(prog.table.masks, pl.table.masks)
+        np.testing.assert_array_equal(prog.inc, pl.inc)
+        # spike projections -> header-only packets everywhere
+        assert (prog.payload_bits == 0).all()
+        assert prog.fits()
+
+
+def test_dvfs_thresholds_flow_from_graph_to_engine():
+    """A net built with custom l_th1/l_th2 must drive the engine's DVFS
+    controller through the plain graph -> compile -> ChipSim path (no
+    hand-patching at call sites)."""
+    import dataclasses
+    from repro.configs import paper
+    sp = dataclasses.replace(paper.SYNFIRE, l_th1=5, l_th2=10)
+    sim = ChipSim(compile_graph(synfire_graph(8, sp=sp)))
+    assert (sim.dvfs.l_th1, sim.dvfs.l_th2) == (5, 10)
+
+
+def test_synfire_shim_still_works():
+    """Deprecated ChipSim.synfire constructor routes through the graph
+    API and stays equivalent."""
+    sim = ChipSim.synfire(8)
+    recs = sim.run(120)
+    ref = simulate_synfire(build_synfire(0), 120)
+    assert np.array_equal(np.asarray(recs["spikes_exc"]),
+                          np.asarray(ref["spikes_exc"]))
+
+
+# -------------------------------------------------------------------------
+# Graph validation + compile errors
+# -------------------------------------------------------------------------
+
+def test_graph_rejects_bad_projections():
+    pops = [Population("a", 10, 100), Population("b", 10, 100)]
+    with pytest.raises(ValueError, match="unknown population"):
+        NetGraph(pops, [Projection("a", "zzz")])
+    with pytest.raises(ValueError, match="bits_per_packet"):
+        Projection("a", "b", payload=GRADED, bits_per_packet=0)
+    with pytest.raises(ValueError, match="must not carry"):
+        Projection("a", "b", payload=SPIKE, bits_per_packet=8)
+    with pytest.raises(ValueError, match="duplicate"):
+        NetGraph([Population("a", 1, 1), Population("a", 1, 1)], [])
+
+
+def test_compile_rejects_oversized_graph_with_clear_error():
+    with pytest.raises(ValueError, match="mesh holds 16 PEs"):
+        compile_graph(synfire_graph(64), MeshSpec(2, 2))
+    with pytest.raises(ValueError, match="exceeds the .* PE SRAM"):
+        compile_graph(NetGraph(
+            [Population("fat", 1, sram_bytes=10 * 1024 * 1024)], [],
+            semantics=object()))
+
+
+def test_compile_rejects_mixed_packet_classes_per_source():
+    """One multicast tree per source PE means one packet class per source:
+    mixing spike + graded (or two graded sizes) on a population's
+    out-projections would silently misprice traffic, so compile refuses."""
+    pops = [Population("s", 8, 64), Population("a", 8, 64),
+            Population("b", 8, 64)]
+    mixed = NetGraph(pops, [
+        Projection("s", "a", payload=SPIKE),
+        Projection("s", "b", payload=GRADED, bits_per_packet=1024),
+    ], semantics=object())
+    with pytest.raises(ValueError, match="mixes packet classes"):
+        compile_graph(mixed)
+    two_sizes = NetGraph(pops, [
+        Projection("s", "a", payload=GRADED, bits_per_packet=64),
+        Projection("s", "b", payload=GRADED, bits_per_packet=1024),
+    ], semantics=object())
+    with pytest.raises(ValueError, match="mixes packet classes"):
+        compile_graph(two_sizes)
+    # same class on every edge is fine
+    ok = NetGraph(pops, [
+        Projection("s", "a", payload=GRADED, bits_per_packet=64),
+        Projection("s", "b", payload=GRADED, bits_per_packet=64),
+    ], semantics=object())
+    prog = compile_graph(ok)
+    assert prog.payload_bits[prog.pe_range("s")[0]] == 64
+
+
+def test_compile_requires_semantics():
+    with pytest.raises(ValueError, match="no tick semantics"):
+        compile_graph(NetGraph([Population("a", 1, 1)], []))
+
+
+def test_align_qpe_separates_populations():
+    prog = compile_graph(hybrid_graph(n_neurons=64, hidden=16, n_ticks=10))
+    (src,), (dst,) = prog.pe_range("nef"), prog.pe_range("mlp")
+    # distinct QPEs -> the projection crosses >= 1 real mesh link
+    assert tuple(prog.coords[src]) != tuple(prog.coords[dst])
+    assert prog.inc[src].sum() >= 1
+    # graded payload class on the source PE
+    assert prog.payload_bits[src] == 16 * 64
+    assert prog.payload_bits[dst] == 0
+
+
+# -------------------------------------------------------------------------
+# Conservation: graded payload in == out across the NoC
+# -------------------------------------------------------------------------
+
+def test_hybrid_graded_payload_conserved():
+    """Every graded payload bit the NEF PE emits arrives at the MLP PE one
+    transport tick later — the NoC neither drops nor invents events."""
+    h = hybrid_workload(n_neurons=128, hidden=32, n_ticks=300)
+    out = h["graded_bits_out"]                  # (T,) bits emitted per tick
+    inn = h["graded_bits_in"]                   # (T,) bits consumed per tick
+    assert out.sum() > 0
+    np.testing.assert_array_equal(out[:-1], inn[1:])
+    # nothing arrives before anything was sent
+    assert inn[0] == 0
+
+
+def test_dnn_program_compiles_and_places_tiles():
+    graph = dnn_graph()
+    prog = compile_graph(graph)
+    total_tiles = sum(p.n_tiles for p in graph.populations)
+    assert prog.n_pes == total_tiles
+    assert prog.fits()
+    # graded projections: every non-final layer's PEs carry payload bits
+    last = graph.populations[-1].name
+    for pop in graph.populations:
+        pes = prog.pe_range(pop.name)
+        if pop.name == last:
+            assert (prog.payload_bits[pes] == 0).all()
+        else:
+            assert (prog.payload_bits[pes] > 0).all()
+
+
+def test_power_table_works_for_any_program():
+    """chip_power_table is workload-agnostic: it only needs the standard
+    per-tick record contract."""
+    h = hybrid_workload(n_neurons=64, hidden=16, n_ticks=120)
+    tab = chip_power_table(h["sim"], h["recs"])
+    assert tab["n_pes"] == 2
+    assert tab["per_pe"]["dvfs"]["total"] > 0
+    assert tab["noc"]["power_mw"] > 0

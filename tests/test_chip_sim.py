@@ -57,8 +57,8 @@ def test_chip8_wave_and_link_loads(chip8):
 
 def test_chip64_runs_and_reports(chip64):
     sim, recs = chip64
-    assert sim.placement.n_pes == 64
-    assert (sim.placement.mesh.width, sim.placement.mesh.height) == (4, 4)
+    assert sim.program.n_pes == 64
+    assert (sim.program.mesh.width, sim.program.mesh.height) == (4, 4)
     spk = np.asarray(recs["spikes_exc"]).sum(axis=2)
     # wave traverses the whole ring: PE63 fires strongly at ~t=630
     w63 = np.where(spk[:, 63] > 100)[0]
@@ -79,7 +79,7 @@ def test_chip64_runs_and_reports(chip64):
     assert loads.shape == (700, sim.noc.n_links)
     # only links on some ring edge ever carry traffic
     used = loads.sum(axis=0) > 0
-    on_tree = np.asarray(sim.placement.inc).sum(axis=0) > 0
+    on_tree = np.asarray(sim.program.inc).sum(axis=0) > 0
     assert np.array_equal(used, used & on_tree)
 
 
@@ -96,7 +96,10 @@ def test_chip_dvfs_tracks_wave(chip64):
     assert frac_pl1 > 0.9
 
 
-def test_tiled_dnn_workload_report():
+def test_tiled_dnn_workload_runs_on_mesh():
+    """The DNN program executes tick-by-tick on ChipSim (no analytic
+    shortcut): frames stream through the pipeline, graded activation
+    bursts hit real links, DVFS power is reported per tick."""
     rep = tiled_dnn_workload()
     assert rep["n_pes_used"] >= 4
     assert rep["latency_s"] > 0 and rep["compute_s"] > 0
@@ -105,6 +108,17 @@ def test_tiled_dnn_workload_report():
     # per-layer latency sums to the compute total
     total = sum(l["layer_latency_s"] for l in rep["layers"])
     np.testing.assert_allclose(total, rep["compute_s"], rtol=1e-9)
+    # tick-by-tick execution: every injected frame leaves the last layer
+    assert rep["n_frames_out"] == 4
+    # graded multi-flit packets weigh more than their packet count
+    assert rep["peak_link_flits"] > rep["peak_link_load"]
+    # DVFS power table is produced from the per-tick records
+    assert rep["table"]["per_pe"]["dvfs"]["total"] > 0
+    assert rep["table"]["per_pe"]["dvfs"]["total"] < \
+        rep["table"]["per_pe"]["pl3"]["total"]
+    # the pipeline is idle most ticks -> DVFS saves baseline power
+    busy = np.asarray(rep["recs"]["busy"])
+    assert 0 < busy.mean() < 0.5
 
 
 def test_hybrid_workload_event_energy():
@@ -115,3 +129,6 @@ def test_hybrid_workload_event_energy():
     assert h["energy_mac_j"] < h["energy_mac_frame_j"]
     assert h["energy_noc_j"] > 0
     assert h["synops"]["pj_per_eq_synop"] < 30.0       # beats Loihi's 24
+    # tick-by-tick on the mesh: per-link graded traffic + DVFS PLs recorded
+    assert h["link_loads"].shape[0] == 400
+    assert np.asarray(h["recs"]["pl"]).shape == (400, h["sim"].program.n_pes)
