@@ -11,19 +11,30 @@ graph -> compile -> ChipProgram pipeline:
   bursts priced in DNoC flits, pipeline latency + MAC/NoC energy.
 * the hybrid NEF -> event-MAC program: spike-vector payloads over the
   mesh, event-vs-frame energy, graded-payload conservation.
+
+The board-scale sweep (``--sweep 256,1024,4096``) takes the same three
+classes to 1000+ PE meshes through the SPARSE NoC path, reporting graph
+build, compile and per-tick engine time separately plus a sparse-vs-dense
+microbench of the per-tick link/flit accounting — the numbers behind
+BENCH_pr3.json (run with ``--json`` to regenerate it).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, time_call
 from repro.chip.chip import ChipSim, chip_power_table
 from repro.chip.compile import compile as compile_graph
-from repro.chip.workloads import (hybrid_workload, synfire_graph,
+from repro.chip.workloads import (dnn_graph, hybrid_farm_graph,
+                                  hybrid_workload, synfire_graph,
                                   tiled_dnn_workload)
+from repro.configs import paper
+from repro.core.pe import PESpec, partition_layer_to_sram
 
 
 def main(sizes=(8, 16, 32, 64), ticks_per_pe: int = 12) -> None:
@@ -76,5 +87,145 @@ def main(sizes=(8, 16, 32, 64), ticks_per_pe: int = 12) -> None:
          f"payload_conserved={conserved}")
 
 
+# -------------------------------------------------------------------------
+# Board-scale sweep (256 -> 1024 -> 4096 PEs) through the sparse NoC path
+# -------------------------------------------------------------------------
+
+# per-core neuron counts scaled down from Table II so a 4096-PE ring's
+# weight tensors stay in laptop memory — the mesh/NoC work, which is what
+# this sweep measures, is unchanged
+SCALED_SYNFIRE = dataclasses.replace(
+    paper.SYNFIRE, n_exc=16, n_inh=4, neurons_per_core=20,
+    synapses_per_core=400, fan_in_exc=8, fan_in_inh=4, l_th1=2, l_th2=7)
+
+# template conv layer that splits into ~13 tiles under the 128 kB SRAM
+SCALE_DNN_LAYER = dict(h=64, w=64, cin=32, cout=64, kh=3, kw=3)
+
+
+def dnn_layers_for_pes(n_pes: int, pe: PESpec = PESpec()) -> list:
+    """Repeat the template layer until the tiled stack fills ~n_pes PEs."""
+    _, _, tiles = partition_layer_to_sram(
+        pe, **{k: SCALE_DNN_LAYER[k] for k in ("h", "w", "cin", "cout",
+                                               "kh", "kw")})
+    n_layers = max(2, -(-n_pes // tiles))
+    return [dict(SCALE_DNN_LAYER, name=f"conv{i}") for i in range(n_layers)]
+
+
+def build_scaled_graph(cls: str, n_pes: int):
+    if cls == "synfire":
+        return synfire_graph(n_pes, sp=SCALED_SYNFIRE)
+    if cls == "dnn":
+        return dnn_graph(dnn_layers_for_pes(n_pes))
+    if cls == "hybrid":
+        return hybrid_farm_graph(n_pairs=n_pes // 2, n_neurons=32, hidden=16)
+    raise ValueError(cls)
+
+
+def sweep(sizes=(256, 1024, 4096), n_ticks: int = 64,
+          classes=("synfire", "dnn", "hybrid"),
+          compile_budget_s: float | None = None,
+          noc_batch: int = 64) -> None:
+    """Compile + run each workload class at each mesh size.
+
+    Reported separately per (class, size):
+      build_s    — graph construction (weights, drive tables; not ours)
+      compile_s  — place + route + CSR incidence (the vectorized compiler)
+      tick_us    — engine wall time per tick, auto-selected NoC path
+      noc_sparse_us / noc_dense_us — per-tick link+flit accounting alone
+                   (jit'd, warmed, batched over ``noc_batch`` ticks), the
+                   sparse gather+segment-sum vs the dense einsum
+    """
+    rng = np.random.default_rng(0)
+    for cls in classes:
+        for n_pes in sizes:
+            t0 = time.perf_counter()
+            graph = build_scaled_graph(cls, n_pes)
+            build_s = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            prog = compile_graph(graph)
+            compile_s = time.perf_counter() - t0
+            if compile_budget_s is not None and compile_s > compile_budget_s:
+                raise RuntimeError(
+                    f"{cls}@{n_pes}: compile took {compile_s:.2f}s "
+                    f"> budget {compile_budget_s:.2f}s")
+
+            # engine per-tick, auto-selected NoC path, compiled-once scan
+            sim = ChipSim(prog)
+            runner = jax.jit(lambda: sim.run(n_ticks))
+            tick_us = time_call(runner, warmup=1, iters=3) / n_ticks
+
+            # NoC accounting alone, per tick inside a scan (how the engine
+            # pays it): sparse column plan vs dense einsum
+            noc = prog.noc
+            P = prog.n_pes
+            pk0 = jnp.asarray(rng.integers(0, 4, P).astype(np.float32))
+            pb = jnp.asarray(prog.payload_bits)
+            cols, inv = prog.sinc.device_col_plan()
+            inc = jnp.asarray(prog.inc)
+
+            def loads_scan(fn):
+                def step(carry, t):
+                    p = pk0 * (t % 3).astype(jnp.float32)
+                    ll, fl = fn(p)
+                    return carry + ll.sum() + fl.sum(), None
+                return jax.lax.scan(step, jnp.float32(0),
+                                    jnp.arange(noc_batch))[0]
+
+            f_sp = jax.jit(lambda: loads_scan(
+                lambda p: noc.noc_loads_sparse(p, cols, inv, pb)))
+            f_de = jax.jit(lambda: loads_scan(
+                lambda p: (noc.link_loads(p, inc),
+                           noc.flit_loads(p, inc, pb))))
+            # min over rounds: wall-clock noise is one-sided, the minimum
+            # is the best estimator of the true per-tick cost
+            sp_us = min(time_call(f_sp, iters=5) for _ in range(3)) \
+                / noc_batch
+            de_us = min(time_call(f_de, iters=5) for _ in range(3)) \
+                / noc_batch
+
+            emit(f"scale_{cls}_{P}pe", tick_us,
+                 f"mesh={prog.mesh.width}x{prog.mesh.height};"
+                 f"links={noc.n_links};nnz={prog.sinc.nnz};"
+                 f"density={prog.sinc.density:.4f};"
+                 f"build_s={build_s:.3f};compile_s={compile_s:.3f};"
+                 f"noc_sparse_us={sp_us:.2f};noc_dense_us={de_us:.2f};"
+                 f"noc_speedup={de_us / sp_us:.2f};"
+                 f"worst_hops={prog.worst_tree_hops}")
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sweep", default=None, metavar="SIZES",
+                    help="comma list of PE counts, e.g. 256,1024,4096 — "
+                    "run the board-scale sweep instead of the CI smoke")
+    ap.add_argument("--classes", default="synfire,dnn,hybrid")
+    ap.add_argument("--ticks", type=int, default=64)
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="fail if any compile exceeds this many seconds")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows as machine-readable JSON")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    if args.sweep:
+        sweep(sizes=tuple(int(s) for s in args.sweep.split(",")),
+              n_ticks=args.ticks,
+              classes=tuple(args.classes.split(",")),
+              compile_budget_s=args.budget_s)
+    else:
+        main()
+
+    if args.json:
+        import json
+        import platform
+        from pathlib import Path
+        from benchmarks.common import RESULTS
+        payload = {"rows": RESULTS, "jax_version": jax.__version__,
+                   "python": platform.python_version(),
+                   "platform": platform.platform()}
+        path = Path(args.json)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(payload, indent=1))
+        print(f"# wrote {len(RESULTS)} rows to {path}")

@@ -17,21 +17,25 @@ Modules:
   ``TickSemantics`` contract (per-tick step, packets, Eq. (1) energies).
 * ``compile``   — graph -> ``ChipProgram`` lowering with clear capacity /
   SRAM errors.
-* ``mesh_noc``  — link enumeration, X/Y multicast-tree incidence tensors,
-  vectorized per-tick accounting for spike AND graded multi-flit packets.
+* ``mesh_noc``  — link enumeration, arithmetic X/Y multicast-tree
+  construction into a CSR ``SparseIncidence``, and per-tick accounting
+  (sparse segment reduction or dense einsum, bit-identical) for spike
+  AND graded multi-flit packets.
 * ``mapping``   — the shared snake-order placement primitive plus the
   legacy direct placers (``place_ring``/``place_layers``).
 * ``chip``      — ``ChipSim``: runs any program in one ``lax.scan`` with
   per-PE activity-driven DVFS and chip-level power tables.
 * ``workloads`` — graph builders: synfire ring of any length, tiled
-  feedforward DNN pipeline, hybrid NEF + event-driven-MAC pipeline.
+  feedforward DNN pipeline, hybrid NEF + event-driven-MAC pipeline (and
+  its board-scale ``hybrid_farm_graph`` of independent channels).
 """
-from repro.chip.mesh_noc import MeshNoc, MeshSpec
+from repro.chip.mesh_noc import MeshNoc, MeshSpec, SparseIncidence
 from repro.chip.mapping import Placement, place_ring, place_layers
 from repro.chip.graph import NetGraph, Population, Projection
 from repro.chip.compile import ChipProgram, compile
 from repro.chip.chip import ChipSim, chip_power_table
 
-__all__ = ["MeshNoc", "MeshSpec", "Placement", "place_ring", "place_layers",
-           "NetGraph", "Population", "Projection", "ChipProgram", "compile",
-           "ChipSim", "chip_power_table"]
+__all__ = ["MeshNoc", "MeshSpec", "SparseIncidence", "Placement",
+           "place_ring", "place_layers", "NetGraph", "Population",
+           "Projection", "ChipProgram", "compile", "ChipSim",
+           "chip_power_table"]

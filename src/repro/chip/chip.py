@@ -8,10 +8,18 @@ The program's ``TickSemantics`` advances all PEs as batched axes of the
 same arrays and reports per-PE activity (packets emitted, performance
 level, Eq. (1) energy split); what the engine adds per tick is the NoC:
 each source's packet count hits its precomputed multicast-tree incidence
-row, one einsum yields per-link loads — in packets AND in DNoC flits, so
-graded-payload (multi-flit) packets are priced correctly — and the
-energy/congestion accounting follows from ``NocSpec``.  No per-source
-Python in the hot path, no per-workload branches in the engine.
+— either the dense einsum over the (P, n_links) tensor or, once trees are
+sparse relative to the mesh (the board-scale regime), a gather +
+segment-sum over the CSR entries (``repro.kernels.link_load``) — yielding
+per-link loads in packets AND in DNoC flits, so graded-payload
+(multi-flit) packets are priced correctly, plus the energy/congestion
+accounting from ``NocSpec``.  The representation is auto-selected from
+the incidence shape — mesh size, density, per-link fan-in
+(``noc_mode="auto"``; force with "dense"/"sparse") — both paths agree
+bitwise on integer packet counts, and the incidence arrays are hoisted
+onto the device once, outside the per-tick closure.
+No per-source Python in the hot path, no per-workload branches in the
+engine.
 
 ``chip_power_table`` generalizes ``synfire_power_table`` from one PE
 average to the whole chip: per-PE table + chip totals + NoC power + the
@@ -27,17 +35,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.chip.compile import ChipProgram
-from repro.chip.mesh_noc import MeshNoc, MeshSpec, SPIKE_PACKET_BITS
+from repro.chip.mesh_noc import (DENSE_DENSITY, MAX_SPARSE_COLS,
+                                 MIN_SPARSE_LINKS, MeshNoc, MeshSpec,
+                                 SPIKE_PACKET_BITS)
 from repro.core.dvfs import DVFSController
 from repro.core.energy import PEEnergyModel
 
 
 @dataclass
 class ChipSim:
-    """A compiled workload program on a full PE mesh."""
+    """A compiled workload program on a full PE mesh.
+
+    ``noc_mode`` selects the NoC accounting representation: "auto" picks
+    sparse vs dense by incidence density, "sparse"/"dense" force it (the
+    two agree bitwise — forcing is for benchmarks and golden tests).
+    """
     program: ChipProgram
     dvfs: Optional[DVFSController] = None
     em: PEEnergyModel = field(default_factory=PEEnergyModel)
+    noc_mode: str = "auto"
 
     def __post_init__(self):
         if self.dvfs is None:
@@ -67,7 +83,26 @@ class ChipSim:
         graph = synfire_graph(n_pes=n_pes, seed=seed, **build_kw)
         return ChipSim(program=compile_graph(graph, mesh))
 
-    def run(self, n_ticks: int, seed: int = 1) -> dict:
+    def use_sparse_noc(self, noc_mode: str | None = None) -> bool:
+        """Resolve the accounting representation for this program.
+
+        Auto requires a big-enough mesh (below ~256 PEs the dense einsum
+        is a trivially small GEMV that wins on op overhead), a sparse
+        incidence (density), AND a bounded per-link fan-in: the column
+        plan unrolls one op per column, so an all-to-one graph — sparse
+        by density — would still trace an O(P)-op tick body."""
+        mode = noc_mode or self.noc_mode
+        if mode not in ("auto", "sparse", "dense"):
+            raise ValueError(f"unknown noc_mode {mode!r}")
+        if mode == "auto":
+            sinc = self.program.sinc
+            return (sinc.n_links >= MIN_SPARSE_LINKS
+                    and sinc.density <= DENSE_DENSITY
+                    and sinc.max_fan_in <= MAX_SPARSE_COLS)
+        return mode == "sparse"
+
+    def run(self, n_ticks: int, seed: int = 1,
+            noc_mode: str | None = None) -> dict:
         """Per-tick records: everything the program's semantics reports
         (spike rasters / layer occupancy / decoded signals, PLs, Eq. (1)
         energies), plus the engine's NoC accounting:
@@ -77,25 +112,35 @@ class ChipSim:
                                   multi-flit packets weigh more)
         e_noc      (T,)         — NoC traffic energy per tick [J]
 
-        For the synfire program the neuron dynamics are the SAME tick
-        function the single-chip path scans (``make_synfire_tick``), so an
-        8-PE ChipSim reproduces ``simulate_synfire`` rasters bit for bit.
+        ``noc_mode`` overrides the sim's representation choice per run;
+        sparse and dense produce bit-identical records.  For the synfire
+        program the neuron dynamics are the SAME tick function the
+        single-chip path scans (``make_synfire_tick``), so an 8-PE ChipSim
+        reproduces ``simulate_synfire`` rasters bit for bit.
         """
         prog = self.program
         tick = prog.make_tick(dvfs=self.dvfs, em=self.em,
                               key=jax.random.PRNGKey(seed))
-        inc = jnp.asarray(prog.inc)
-        tree_links = inc.sum(axis=1)                    # (P,)
-        static_pb = jnp.asarray(prog.payload_bits)
         noc = self.noc
+        # incidence onto the device ONCE, outside the per-tick closure
+        sparse = self.use_sparse_noc(noc_mode)
+        if sparse:
+            cols, inv_perm = prog.sinc.device_col_plan()
+        else:
+            inc = jnp.asarray(prog.inc)
+        tree_links = jnp.asarray(prog.tree_links, jnp.float32)  # (P,)
+        static_pb = jnp.asarray(prog.payload_bits)
 
         def chip_tick(state, t):
             state, rec = tick(state, t)
             packets = rec["packets"].astype(jnp.float32)    # (P,)
             pb = rec.get("payload_bits", static_pb)
-            loads = noc.link_loads(packets, inc)            # (L,)
-            rec["link_load"] = loads
-            rec["link_flits"] = noc.flit_loads(packets, inc, pb)
+            if sparse:
+                rec["link_load"], rec["link_flits"] = noc.noc_loads_sparse(
+                    packets, cols, inv_perm, pb)
+            else:
+                rec["link_load"] = noc.link_loads(packets, inc)
+                rec["link_flits"] = noc.flit_loads(packets, inc, pb)
             rec["e_noc"] = noc.traffic_energy_j(packets, tree_links, pb)
             return state, rec
 

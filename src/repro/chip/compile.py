@@ -11,8 +11,13 @@ workload-agnostic engine needs:
   routing work, with errors that name the offending population.
 * **routing** — a dense ``RoutingTable`` built from the projections (every
   tile of ``src`` multicasts to every tile of ``dst``).
-* **incidence** — each source PE's X/Y-multicast tree precomputed as a 0/1
-  link-incidence row so per-tick NoC accounting is one einsum.
+* **incidence** — each source PE's X/Y-multicast tree, derived
+  arithmetically from its destination coordinate array (all tiles of a
+  population share one destination set, computed once) and emitted as a
+  CSR ``SparseIncidence`` — (link_ids, source_ptr) plus per-source
+  ``tree_links``/``tree_hops`` in the same pass.  O(sum of tree sizes)
+  work and memory; the dense ``(P, n_links)`` tensor is materialized
+  lazily only if something asks for it.
 * **packet classes** — per-source payload bits (0 = header-only spike
   packet; >0 = graded multi-flit packet) from the typed projections.
 
@@ -29,7 +34,7 @@ import numpy as np
 
 from repro.chip.graph import GRADED, NetGraph
 from repro.chip.mapping import snake_coords
-from repro.chip.mesh_noc import MeshNoc, MeshSpec
+from repro.chip.mesh_noc import MeshNoc, MeshSpec, SparseIncidence
 from repro.core.pe import PESpec
 from repro.core.router import RoutingTable
 
@@ -42,7 +47,7 @@ class ChipProgram:
     noc: MeshNoc
     coords: np.ndarray          # (P, 2) int: QPE coord of each logical PE
     table: RoutingTable         # (P, P) source PE -> destination mask
-    inc: np.ndarray             # (P, n_links) float32 multicast incidence
+    sinc: SparseIncidence       # CSR multicast incidence + tree hop depths
     payload_bits: np.ndarray    # (P,) int: payload bits per packet (0=spike)
     sram_bytes: np.ndarray      # (P,) int: per-PE workload state
     pe_slices: dict             # population name -> slice of logical PEs
@@ -52,13 +57,19 @@ class ChipProgram:
         return len(self.coords)
 
     @functools.cached_property
+    def inc(self) -> np.ndarray:
+        """Dense (P, n_links) 0/1 incidence — materialized lazily from the
+        CSR form (the engine only densifies when the einsum path wins)."""
+        return self.sinc.dense()
+
+    @property
+    def tree_links(self) -> np.ndarray:
+        """(P,) multicast-tree link count per source (== inc.sum(axis=1))."""
+        return self.sinc.tree_links
+
+    @functools.cached_property
     def worst_tree_hops(self) -> int:
-        out = 0
-        for i in range(self.n_pes):
-            dsts = [tuple(self.coords[j])
-                    for j in np.flatnonzero(self.table.masks[i])]
-            out = max(out, self.noc.tree_hops(tuple(self.coords[i]), dsts))
-        return out
+        return int(self.sinc.tree_hops.max(initial=0))
 
     def pe_range(self, name: str) -> np.ndarray:
         """Logical PE ids of a population's tiles."""
@@ -166,15 +177,27 @@ def compile(graph: NetGraph, mesh: MeshSpec | None = None,
         payload_bits[pe_slices[pr.src]] = out_bits[pr.src]
     table = RoutingTable(masks)
 
+    # incidence: all tiles of a population multicast to the same
+    # destination set, so the destination coordinate array is computed once
+    # per population and each source tile's tree is derived arithmetically
+    # from it (MeshNoc.tree_link_ids) — never from a per-destination walk
+    # of the (P, P) masks
     noc = MeshNoc(mesh)
-    dst_lists = [[tuple(coords[j]) for j in np.flatnonzero(masks[i])]
-                 for i in range(n_pes)]
-    inc = noc.incidence([tuple(c) for c in coords], dst_lists)
+    dst_slices: dict = {p.name: [] for p in graph.populations}
+    for pr in graph.projections:
+        dst_slices[pr.src].append(pe_slices[pr.dst])
+    empty = np.empty((0, 2), np.int64)
+    dst_lists = []
+    for pop in graph.populations:
+        sls = dst_slices[pop.name]
+        dst_xy = np.concatenate([coords[sl] for sl in sls]) if sls else empty
+        dst_lists.extend([dst_xy] * pop.n_tiles)
+    sinc = noc.sparse_incidence(coords, dst_lists)
 
     sram = np.zeros(n_pes, np.int64)
     for pop in graph.populations:
         sram[pe_slices[pop.name]] = pop.sram_bytes
 
     return ChipProgram(graph=graph, mesh=mesh, noc=noc, coords=coords,
-                       table=table, inc=inc, payload_bits=payload_bits,
+                       table=table, sinc=sinc, payload_bits=payload_bits,
                        sram_bytes=sram, pe_slices=pe_slices)

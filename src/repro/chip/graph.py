@@ -107,11 +107,11 @@ class NetGraph:
     name: str = "net"
 
     def __post_init__(self):
-        names = [p.name for p in self.populations]
-        dup = {n for n in names if names.count(n) > 1}
+        known, dup = set(), set()
+        for p in self.populations:
+            (dup if p.name in known else known).add(p.name)
         if dup:
             raise ValueError(f"duplicate population names: {sorted(dup)}")
-        known = set(names)
         for pr in self.projections:
             for end in (pr.src, pr.dst):
                 if end not in known:

@@ -61,21 +61,18 @@ class Placement:
 
     @property
     def worst_tree_hops(self) -> int:
-        out = 0
-        for i in range(self.n_pes):
-            dsts = [tuple(self.coords[j])
-                    for j in np.flatnonzero(self.table.masks[i])]
-            out = max(out, self.noc.tree_hops(tuple(self.coords[i]), dsts))
-        return out
+        c = np.asarray(self.coords, np.int64)
+        dist = np.abs(c[:, None, :] - c[None, :, :]).sum(axis=-1)
+        return int((dist * self.table.masks).max(initial=0))
 
     def fits(self, pe: PESpec = PESpec()) -> bool:
         return pe.fits_sram(self.sram_bytes_per_pe)
 
 
 def _incidence_from_table(noc: MeshNoc, coords, table: RoutingTable):
-    dst_lists = [[tuple(coords[j]) for j in np.flatnonzero(table.masks[i])]
-                 for i in range(len(coords))]
-    return noc.incidence([tuple(c) for c in coords], dst_lists)
+    c = np.asarray(coords, np.int64)
+    dst_lists = [c[np.flatnonzero(m)] for m in table.masks]
+    return noc.sparse_incidence(c, dst_lists).dense()
 
 
 def synfire_sram_bytes(sp: paper.SynfireParams = paper.SYNFIRE) -> int:

@@ -4,25 +4,53 @@ The chip is a W x H mesh of QPEs (4 PEs each) joined by directed links.
 Spike delivery is multicast: the router duplicates a packet at branch
 points of its X/Y tree, so a tree's cost is its set of distinct links
 (core/noc.py computes this per source with Python loops).  At chip scale
-that loop is hoisted out of the hot path: each source PE's multicast tree
-is precomputed ONCE as a 0/1 link-incidence row, and per-tick traffic
-becomes a dense einsum
+both the setup and the hot path are vectorized:
 
-    link_load[l] = sum_p  packets[p] * incidence[p, l]
+* **setup** — each source's X/Y multicast tree is derived ARITHMETICALLY
+  from its destination coordinate array (one eastward run + one westward
+  run on the source row, one vertical run per destination column), so
+  building the incidence never walks ``xy_route`` hop by hop.  Trees are
+  stored sparse: a CSR ``SparseIncidence`` of (link_ids, source_ptr) —
+  O(sum of tree sizes) memory instead of O(P * n_links).
+* **per tick** — traffic is either the dense einsum
 
-which vectorizes over ticks, sources, and links inside ``jax.lax.scan``.
+      link_load[l] = sum_p  packets[p] * incidence[p, l]
+
+  over the densified incidence, or (preferred once trees are sparse
+  relative to the mesh) a gather + segment-sum over the CSR entries
+  (``repro.kernels.link_load``).  Both paths are exact on integer-valued
+  packet counts, so they agree bitwise; ``ChipSim`` auto-selects from the
+  incidence shape (mesh size, density, per-link fan-in).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import paper
 from repro.core.noc import NocSpec, xy_route
+from repro.kernels.link_load.ops import link_loads_cols
 
 SPIKE_PACKET_BITS = 64        # header-only DNoC spike packet (core/noc.py)
+
+# incidence density above which the dense einsum beats the gather +
+# segment-sum (small meshes / near-broadcast traffic); ChipSim.run uses it
+# to auto-select the accounting path
+DENSE_DENSITY = 0.25
+
+# the column plan unrolls one gather+add per column (= max sources sharing
+# one link), so fan-in-heavy graphs that pass the density test would still
+# trace an O(P)-op tick body; above this column count auto-select falls
+# back to the dense einsum
+MAX_SPARSE_COLS = 128
+
+# below this mesh size the dense einsum is a trivially small GEMV that
+# beats the sparse plan's fixed op overhead (BENCH_pr3.json: the sparse
+# path only breaks even around 8x8-QPE / 256-PE meshes), so auto-select
+# keeps small chips dense
+MIN_SPARSE_LINKS = 128
 
 
 @dataclass(frozen=True)
@@ -55,6 +83,129 @@ class MeshSpec:
         return MeshSpec(w, h, pes_per_qpe)
 
 
+def _concat_ranges(starts: np.ndarray, lens: np.ndarray) -> np.ndarray:
+    """Concatenation of the integer ranges [starts[i], starts[i]+lens[i]),
+    without a Python loop."""
+    ends = np.cumsum(lens)
+    total = int(ends[-1]) if lens.size else 0
+    if total == 0:
+        return np.empty(0, np.int64)
+    return np.repeat(starts, lens) + np.arange(total) - np.repeat(
+        ends - lens, lens)
+
+
+@dataclass
+class SparseIncidence:
+    """CSR multicast-tree incidence: source p's tree is the distinct link
+    ids ``link_ids[source_ptr[p]:source_ptr[p+1]]``.
+
+    Equivalent to the dense 0/1 ``(P, n_links)`` tensor (``dense()``) but
+    O(nnz) = O(sum of tree sizes) instead of O(P * n_links) — the per-tree
+    link count is O(mesh diameter), not O(n_links), so board-scale meshes
+    stay linear.  ``tree_hops[p]`` is the worst hop depth of source p's
+    tree (packet latency), computed in the same construction pass.
+    """
+    link_ids: np.ndarray        # (nnz,) int32 — distinct within a source
+    source_ptr: np.ndarray      # (P + 1,) int64 CSR row pointer
+    n_links: int
+    tree_hops: np.ndarray       # (P,) int32 worst-case hops per source
+
+    @property
+    def n_sources(self) -> int:
+        return len(self.source_ptr) - 1
+
+    @property
+    def nnz(self) -> int:
+        return len(self.link_ids)
+
+    @property
+    def density(self) -> float:
+        cells = self.n_sources * self.n_links
+        return self.nnz / cells if cells else 1.0
+
+    @functools.cached_property
+    def tree_links(self) -> np.ndarray:
+        """(P,) link count of each source's multicast tree
+        (== dense().sum(axis=1))."""
+        return np.diff(self.source_ptr).astype(np.int64)
+
+    @functools.cached_property
+    def src_of_entry(self) -> np.ndarray:
+        """(nnz,) source id of each CSR entry — the gather index of the
+        per-tick segment-sum."""
+        return np.repeat(np.arange(self.n_sources, dtype=np.int32),
+                         self.tree_links)
+
+    @staticmethod
+    def from_rows(rows, n_links: int, tree_hops) -> "SparseIncidence":
+        """Assemble the CSR form from per-source link-id arrays."""
+        lens = np.array([r.size for r in rows], np.int64)
+        ptr = np.zeros(len(rows) + 1, np.int64)
+        np.cumsum(lens, out=ptr[1:])
+        ids = (np.concatenate(rows).astype(np.int32) if rows
+               else np.empty(0, np.int32))
+        return SparseIncidence(link_ids=ids, source_ptr=ptr,
+                               n_links=n_links,
+                               tree_hops=np.asarray(tree_hops, np.int32))
+
+    @functools.cached_property
+    def max_fan_in(self) -> int:
+        """Max sources sharing one link == column count of ``col_plan``
+        (one vectorized bincount — no sort, no plan build)."""
+        return int(np.bincount(self.link_ids, minlength=1).max())
+
+    @functools.cached_property
+    def csc(self) -> tuple[np.ndarray, np.ndarray]:
+        """Link-major (CSC) view: (src_sorted, link_ptr) with entries
+        sorted by link id — the layout of the Pallas prefix-sum kernel."""
+        order = np.argsort(self.link_ids, kind="stable")
+        counts = np.bincount(self.link_ids, minlength=self.n_links)
+        link_ptr = np.zeros(self.n_links + 1, np.int64)
+        np.cumsum(counts, out=link_ptr[1:])
+        return self.src_of_entry[order], link_ptr
+
+    @functools.cached_property
+    def col_plan(self) -> tuple[tuple, np.ndarray]:
+        """Prefix-column layout of the per-link segment reduction — the
+        engine's per-tick plan.
+
+        Links sorted by source count (heaviest first); column k holds the
+        (k+1)-th source id of every link that HAS a (k+1)-th source, so
+        the k-th take covers exactly the first ``len(cols[k])`` sorted
+        links — per-link loads accumulate as K unrolled 1-D gathers +
+        prefix adds (sum of lengths = nnz, no padding, no scatter op),
+        then one final take restores link-id order via ``inv_perm``.
+        Each link's sum has the same exact integer-valued terms as the
+        dense einsum row, so the two agree bitwise.
+
+        Returns (cols, inv_perm): cols a tuple of int32 index arrays of
+        non-increasing length, inv_perm (n_links,) int32."""
+        src_sorted, link_ptr = self.csc
+        counts = np.diff(link_ptr)
+        order = np.argsort(-counts, kind="stable")
+        inv_perm = np.empty(self.n_links, np.int32)
+        inv_perm[order] = np.arange(self.n_links, dtype=np.int32)
+        sorted_counts = counts[order]
+        cols = []
+        for k in range(int(counts.max(initial=0))):
+            n_k = int(np.count_nonzero(sorted_counts > k))
+            cols.append(src_sorted[link_ptr[order[:n_k]] + k]
+                        .astype(np.int32))
+        return tuple(cols), inv_perm
+
+    def device_col_plan(self) -> tuple[tuple, "jnp.ndarray"]:
+        """``col_plan`` as device arrays, ready to close over in a tick
+        loop (hoist ONCE per program, not per tick)."""
+        cols, inv_perm = self.col_plan
+        return tuple(jnp.asarray(c) for c in cols), jnp.asarray(inv_perm)
+
+    def dense(self) -> np.ndarray:
+        """Materialize the (P, n_links) 0/1 incidence tensor."""
+        m = np.zeros((self.n_sources, self.n_links), np.float32)
+        m[self.src_of_entry, self.link_ids] = 1.0
+        return m
+
+
 @dataclass
 class MeshNoc:
     """Link enumeration + incidence construction + vectorized accounting."""
@@ -73,45 +224,130 @@ class MeshNoc:
                     links.append(((x, y + 1), (x, y)))
         self.links = links
         self.link_index = {lk: i for i, lk in enumerate(links)}
+        # arithmetic link-id tables, keyed by the link's lower endpoint —
+        # what lets tree construction index whole runs of links at once
+        W, H = self.mesh.width, self.mesh.height
+        self._id_e = np.full((W, H), -1, np.int32)   # (x,y) -> (x+1,y)
+        self._id_w = np.full((W, H), -1, np.int32)   # (x+1,y) -> (x,y)
+        self._id_n = np.full((W, H), -1, np.int32)   # (x,y) -> (x,y+1)
+        self._id_s = np.full((W, H), -1, np.int32)   # (x,y+1) -> (x,y)
+        for i, ((x0, y0), (x1, y1)) in enumerate(links):
+            if x1 == x0 + 1:
+                self._id_e[x0, y0] = i
+            elif x1 == x0 - 1:
+                self._id_w[x1, y1] = i
+            elif y1 == y0 + 1:
+                self._id_n[x0, y0] = i
+            else:
+                self._id_s[x0, y1] = i
 
     @property
     def n_links(self) -> int:
         return len(self.links)
 
-    # -- incidence construction (setup time, Python) ----------------------
+    # -- incidence construction (setup time, numpy) -----------------------
 
     def tree_links(self, src: tuple, dsts) -> set:
         """Distinct links of the X/Y multicast tree src -> dsts (shared
-        prefixes paid once — the router duplicates at branch points)."""
+        prefixes paid once — the router duplicates at branch points).
+
+        Reference implementation: walks ``xy_route`` per destination.  The
+        vectorized ``tree_link_ids`` is validated against it in tests."""
         out: set = set()
         for d in dsts:
             if d != src:
                 out.update(xy_route(src, d))
         return out
 
+    def tree_link_ids(self, src, dst_xy: np.ndarray) -> np.ndarray:
+        """Distinct link ids of the X/Y multicast tree src -> dst coords,
+        derived arithmetically from the destination coordinate array.
+
+        X-first routing makes the tree one horizontal trunk on the source
+        row (east to the farthest east destination column, west to the
+        farthest west) plus, per destination column, one vertical run to
+        the farthest row above/below — no per-destination route walk.
+        """
+        d = np.asarray(dst_xy, np.int64).reshape(-1, 2)
+        if not d.size:
+            return np.empty(0, np.int32)
+        sx, sy = int(src[0]), int(src[1])
+        dx, dy = d[:, 0], d[:, 1]
+        parts = []
+        xmax, xmin = int(dx.max()), int(dx.min())
+        if xmax > sx:
+            parts.append(self._id_e[sx:xmax, sy])
+        if xmin < sx:
+            parts.append(self._id_w[xmin:sx, sy])
+        up = dy > sy
+        if up.any():
+            top = np.full(self.mesh.width, sy, np.int64)
+            np.maximum.at(top, dx[up], dy[up])
+            cols = np.flatnonzero(top > sy)
+            lens = top[cols] - sy
+            ys = _concat_ranges(np.full(cols.size, sy, np.int64), lens)
+            parts.append(self._id_n[np.repeat(cols, lens), ys])
+        dn = dy < sy
+        if dn.any():
+            bot = np.full(self.mesh.width, sy, np.int64)
+            np.minimum.at(bot, dx[dn], dy[dn])
+            cols = np.flatnonzero(bot < sy)
+            lens = sy - bot[cols]
+            ys = _concat_ranges(bot[cols], lens)
+            parts.append(self._id_s[np.repeat(cols, lens), ys])
+        if not parts:
+            return np.empty(0, np.int32)
+        return np.concatenate(parts).astype(np.int32)
+
+    def sparse_incidence(self, src_coords, dst_coord_lists) -> SparseIncidence:
+        """CSR incidence + per-source tree hop depths in one pass.
+
+        ``dst_coord_lists[i]`` is source i's destination coordinate array
+        (anything ``np.asarray`` can shape to (n, 2); duplicates and the
+        source's own coordinate are harmless)."""
+        src = np.asarray(src_coords, np.int64).reshape(-1, 2)
+        rows = []
+        hops = np.zeros(len(src), np.int32)
+        for i, (s, d) in enumerate(zip(src, dst_coord_lists)):
+            d = np.asarray(d, np.int64).reshape(-1, 2)
+            rows.append(self.tree_link_ids(s, d))
+            if d.size:
+                hops[i] = int(np.abs(d - s).sum(axis=1).max())
+        return SparseIncidence.from_rows(rows, self.n_links, hops)
+
     def incidence_row(self, src: tuple, dsts) -> np.ndarray:
         row = np.zeros(self.n_links, np.float32)
-        for lk in self.tree_links(src, dsts):
-            row[self.link_index[lk]] = 1.0
+        row[self.tree_link_ids(src, np.asarray(list(dsts),
+                                               np.int64).reshape(-1, 2))] = 1.0
         return row
 
     def incidence(self, src_coords, dst_coord_lists) -> np.ndarray:
         """(n_sources, n_links) 0/1 multicast-tree incidence tensor."""
-        return np.stack([self.incidence_row(s, d)
-                         for s, d in zip(src_coords, dst_coord_lists)])
+        return self.sparse_incidence(src_coords, dst_coord_lists).dense()
 
     def tree_hops(self, src: tuple, dsts) -> int:
         """Worst-case hop depth of the multicast tree (packet latency)."""
         return max((abs(src[0] - d[0]) + abs(src[1] - d[1]) for d in dsts),
                    default=0)
 
-    # -- per-tick accounting (traced, dense) ------------------------------
+    # -- per-tick accounting (traced; dense or CSR) -----------------------
 
     def link_loads(self, packets, inc) -> jnp.ndarray:
         """packets: (..., n_sources) packet counts emitted per source this
         tick; inc: (n_sources, n_links).  Returns (..., n_links) loads."""
         return jnp.einsum("...p,pl->...l", packets.astype(jnp.float32),
                           jnp.asarray(inc))
+
+    def link_loads_sparse(self, packets, buckets, inv_perm):
+        """Sparse twin of ``link_loads``: bucketed column gathers +
+        prefix adds — O(nnz) instead of the dense O(P * n_links), with no
+        scatter in the hot path.
+
+        ``buckets``/``inv_perm`` are ``SparseIncidence.col_plan`` (pass
+        device index arrays, hoisted out of tick loops).  Bitwise-equal
+        to the dense einsum on integer-valued counts."""
+        return link_loads_cols(packets.astype(jnp.float32), buckets,
+                               inv_perm, n_links=self.n_links)
 
     def spike_energy_j(self, loads) -> jnp.ndarray:
         """Energy of header-only spike packets from total link traversals."""
@@ -139,24 +375,34 @@ class MeshNoc:
         w = packets.astype(jnp.float32) * self.packet_flits(payload_bits)
         return jnp.einsum("...p,pl->...l", w, jnp.asarray(inc))
 
+    def flit_loads_sparse(self, packets, buckets, inv_perm, payload_bits):
+        """Sparse twin of ``flit_loads`` (same column plan as
+        ``link_loads_sparse``)."""
+        w = packets.astype(jnp.float32) * self.packet_flits(payload_bits)
+        return link_loads_cols(w, buckets, inv_perm, n_links=self.n_links)
+
+    def noc_loads_sparse(self, packets, buckets, inv_perm, payload_bits):
+        """One tick's (link_loads, flit_loads) through one fused column
+        pass — the engine's sparse hot path."""
+        pk = packets.astype(jnp.float32)
+        w = jnp.stack([pk, pk * self.packet_flits(payload_bits)])
+        both = link_loads_cols(w, buckets, inv_perm, n_links=self.n_links)
+        return both[0], both[1]
+
     def traffic_energy_j(self, packets, tree_links, payload_bits):
         """Energy of one tick's multicast traffic, packet-class aware.
 
         packets (..., P) packets emitted per source; tree_links (P,) link
-        count of each source's multicast tree (= inc.sum(axis=1));
-        payload_bits (..., P) or (P,).  Spike packets cost 64 b per link
-        traversal, graded packets cost their flit footprint.
+        count of each source's multicast tree (``SparseIncidence.
+        tree_links`` == inc.sum(axis=1)); payload_bits (..., P) or (P,).
+        Spike packets cost 64 b per link traversal, graded packets cost
+        their flit footprint.  Representation-independent: both the dense
+        and the sparse engine path call this with the same inputs.
         """
-        bits = (packets.astype(jnp.float32) * jnp.asarray(tree_links)
+        bits = (packets.astype(jnp.float32)
+                * jnp.asarray(tree_links, jnp.float32)
                 * self.packet_bits(payload_bits))
         return bits.sum(axis=-1) * self.spec.pj_per_bit_hop * 1e-12
-
-    def payload_energy_j(self, loads, payload_bits) -> jnp.ndarray:
-        """Energy of payload packets: each traversal moves ceil(bits/128)
-        DNoC flits of 192 bits."""
-        nflits = -(-payload_bits // self.spec.payload_bits)
-        return (loads.sum(axis=-1) * nflits * self.spec.flit_bits
-                * self.spec.pj_per_bit_hop * 1e-12)
 
     def congestion(self, loads) -> jnp.ndarray:
         """Peak per-link load (packets / tick) — the SpiNNCer-style traffic

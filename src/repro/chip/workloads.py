@@ -485,6 +485,137 @@ def hybrid_graph(n_neurons: int = 256, hidden: int = 64,
                     name="hybrid_nef_mlp")
 
 
+@dataclass
+class HybridFarmSemantics:
+    """K independent NEF -> event-MAC channels ticking in lockstep — the
+    Sec. II hybrid at board scale (one channel = ``HybridSemantics``).
+
+    All channels share one ensemble build (weights, LIF constants, drive
+    table) but integrate phase-shifted copies of the drive, so spike
+    times — and therefore NoC traffic — decorrelate across the mesh.
+    States batch the channel axis: (K, N) arrays, one ``lif_step_ref``
+    call for the whole farm.  Each NEF PE emits at most one graded
+    spike-vector packet per tick (16 b per spike), consumed by its paired
+    MLP PE on the next tick; energy follows activity on the NoC and in
+    the datapath, exactly as in the single-channel semantics.
+    """
+    ens: object                         # core.nef.Ensemble (shared build)
+    w_eff: jnp.ndarray                  # (N, hidden) f32 dequantized
+    drive_fx: jnp.ndarray               # (T, N) int32 s16.15 encode drive
+    n_pairs: int
+    bits_per_spike: int = 16
+    t_sys_s: float = 1e-3
+
+    def _pe_ids(self, program: ChipProgram):
+        nef = np.array([program.pe_slices[f"nef{k}"].start
+                        for k in range(self.n_pairs)])
+        mlp = np.array([program.pe_slices[f"mlp{k}"].start
+                        for k in range(self.n_pairs)])
+        return nef, mlp
+
+    def init_state(self, program: ChipProgram):
+        K, N = self.n_pairs, self.ens.n_neurons
+        return {"v": jnp.zeros((K, N), jnp.int32),
+                "ref": jnp.zeros((K, N), jnp.int32),
+                "spike_buf": jnp.zeros((K, N), jnp.float32)}
+
+    def make_tick(self, program: ChipProgram, *, dvfs, em, key):
+        ens = self.ens
+        K, N, D = self.n_pairs, ens.n_neurons, ens.dims
+        hidden = self.w_eff.shape[1]
+        P = program.n_pes
+        drive = self.drive_fx
+        T = drive.shape[0]
+        # co-prime phase offsets decorrelate the channels' spike times
+        offsets = jnp.asarray((np.arange(K) * 17) % T)
+        nef_np, mlp_np = self._pe_ids(program)
+        nef_ids, mlp_ids = jnp.asarray(nef_np), jnp.asarray(mlp_np)
+        n_neur = jnp.zeros(P).at[nef_ids].set(float(N)).astype(jnp.int32)
+        w_eff = self.w_eff
+
+        def tick(state, t):
+            dfx = drive[(t + offsets) % T]                    # (K, N)
+            v, ref, spk = lif_step_ref(state["v"], state["ref"], dfx,
+                                       **ens.lif)
+            spk_f = spk.astype(jnp.float32)                   # (K, N)
+            n_spk = spk_f.sum(axis=1)                         # (K,)
+            active = (n_spk > 0).astype(jnp.float32)
+            bits_out = self.bits_per_spike * n_spk
+
+            # MLP PEs consume LAST tick's spike vectors (1-tick transport)
+            arr = state["spike_buf"]                          # (K, N)
+            h = arr @ w_eff                                   # (K, hidden)
+            n_arr = arr.sum(axis=1)                           # (K,)
+            mac_events = n_arr * hidden
+            bits_in = self.bits_per_spike * n_arr
+
+            zP = jnp.zeros(P)
+            packets = zP.at[nef_ids].set(active)
+            payload_bits = zP.at[nef_ids].set(bits_out)
+            fifo = zP.at[nef_ids].set(float(N)).at[mlp_ids].set(n_arr)
+            pl = dvfs.select_pl(fifo.astype(jnp.int32))
+            snn_ev = zP.at[nef_ids].set(n_spk * D)
+            syn_ev = snn_ev.at[mlp_ids].add(mac_events)
+            e_dvfs = em.tick_energy(pl, n_neur, snn_ev, dvfs=True)
+            e_pl3 = em.tick_energy(jnp.full((P,), 2), n_neur, snn_ev,
+                                   dvfs=False)
+            e_mac = zP.at[mlp_ids].set(mac_dynamic_energy_j(mac_events))
+
+            rec = {
+                "packets": packets,
+                "payload_bits": payload_bits,
+                "graded_bits_out": zP.at[nef_ids].set(bits_out),
+                "graded_bits_in": zP.at[mlp_ids].set(bits_in),
+                "pl": pl,
+                "n_fifo": fifo,
+                "syn_events": syn_ev,
+                "n_spk": n_spk.sum(),
+                "hidden_out": h,
+                "e_dvfs_baseline": e_dvfs["baseline"],
+                "e_dvfs_neuron": e_dvfs["neuron"],
+                "e_dvfs_synapse": e_dvfs["synapse"] + e_mac,
+                "e_pl3_baseline": e_pl3["baseline"],
+                "e_pl3_neuron": e_pl3["neuron"],
+                "e_pl3_synapse": e_pl3["synapse"] + e_mac,
+            }
+            new_state = {"v": v, "ref": ref, "spike_buf": spk_f}
+            return new_state, rec
+
+        return tick
+
+
+def hybrid_farm_graph(n_pairs: int, n_neurons: int = 32, hidden: int = 16,
+                      n_ticks: int = 256, seed: int = 0) -> NetGraph:
+    """``n_pairs`` independent NEF -> event-MAC channels as one graph
+    (2 * n_pairs populations).  All NEF populations are laid out before
+    all MLP populations, so channel k's projection crosses a long stretch
+    of the snake — board-scale multicast traffic over real mesh links.
+    """
+    ens = build_ensemble(n_neurons, 1, seed=seed)
+    t = np.arange(n_ticks)
+    x = 0.8 * np.sin(2 * np.pi * t / 97)[:, None]
+    drive_fx = encode_drive(ens, x, use_mac=True)
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((n_neurons, hidden)) * 0.1,
+                    jnp.float32)
+    wq, ws = quantize_params_linear(w)
+    w_eff = wq.astype(jnp.float32) * ws[None, :]
+
+    nef_sram = n_neurons * (3 * 4 + 2 * 4)
+    mlp_sram = n_neurons * hidden + hidden * 4 + n_neurons // 8
+    pops = ([Population(name=f"nef{k}", n=n_neurons, sram_bytes=nef_sram)
+             for k in range(n_pairs)]
+            + [Population(name=f"mlp{k}", n=hidden, sram_bytes=mlp_sram)
+               for k in range(n_pairs)])
+    projs = [Projection(src=f"nef{k}", dst=f"mlp{k}", payload=GRADED,
+                        bits_per_packet=16 * n_neurons, delay_ticks=1)
+             for k in range(n_pairs)]
+    sem = HybridFarmSemantics(ens=ens, w_eff=w_eff, drive_fx=drive_fx,
+                              n_pairs=n_pairs)
+    return NetGraph(populations=pops, projections=projs, semantics=sem,
+                    name=f"hybrid_farm{n_pairs}")
+
+
 def hybrid_workload(n_neurons: int = 256, hidden: int = 64,
                     n_ticks: int = 600, mesh: MeshSpec | None = None,
                     seed: int = 0) -> dict:

@@ -1,0 +1,3 @@
+from repro.kernels.link_load.ops import (link_loads_cols, link_loads_csc,
+                                         link_loads_csr)
+from repro.kernels.link_load.ref import link_loads_ref

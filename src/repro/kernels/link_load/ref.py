@@ -1,0 +1,27 @@
+"""Pure-jnp oracle of the sparse per-link load accumulation.
+
+One tick of NoC accounting over a CSR multicast-tree incidence
+(``repro.chip.mesh_noc.SparseIncidence``): every CSR entry (source p uses
+link l) contributes source p's weight to link l's load,
+
+    loads[l] = sum_{e : link_ids[e] == l}  weights[src_of_entry[e]]
+
+— a gather followed by a segment-sum, O(nnz) instead of the dense
+O(P * n_links) einsum.  On integer-valued weights (packet or flit counts
+below 2**24) float32 accumulation is exact in any order, so this agrees
+BITWISE with the dense einsum — the engine's sparse/dense auto-select
+never changes results.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def link_loads_ref(weights, link_ids, src_of_entry, n_links: int):
+    """weights: (..., P) per-source counts; link_ids/src_of_entry: (nnz,)
+    CSR entry arrays.  Returns (..., n_links) per-link loads."""
+    w = jnp.take(weights.astype(jnp.float32), src_of_entry, axis=-1)
+    wm = jnp.moveaxis(w, -1, 0)                       # (nnz, ...)
+    loads = jax.ops.segment_sum(wm, link_ids, num_segments=n_links)
+    return jnp.moveaxis(loads, 0, -1)

@@ -1,0 +1,89 @@
+"""link_load kernel triplet: segment-sum ref == dense einsum == column
+plan == Pallas prefix-sum kernel, on random CSR incidences."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.chip.mesh_noc import MeshNoc, MeshSpec, SparseIncidence
+from repro.kernels.link_load.link_load import (BLOCK_ROWS, LANES,
+                                               flat_prefix_sum_pallas)
+from repro.kernels.link_load.ops import (link_loads_cols, link_loads_csc,
+                                         link_loads_csr)
+from repro.kernels.link_load.ref import link_loads_ref
+
+def _random_sinc(rng, n_sources, n_links, max_tree):
+    """Random CSR incidence: per source, a sample of distinct link ids."""
+    rows = [rng.choice(n_links, rng.integers(0, max_tree + 1),
+                       replace=False).astype(np.int32)
+            for _ in range(n_sources)]
+    return SparseIncidence.from_rows(rows, n_links,
+                                     np.zeros(n_sources, np.int32))
+
+
+@pytest.mark.parametrize("seed,n_sources,n_links,max_tree", [
+    (0, 1, 1, 1), (1, 8, 4, 2), (2, 40, 60, 12), (3, 17, 9, 9),
+    (4, 33, 50, 1), (5, 5, 64, 30), (6, 64, 8, 8), (7, 25, 25, 0),
+])
+def test_all_layouts_equal_dense(seed, n_sources, n_links, max_tree):
+    rng = np.random.default_rng(seed)
+    max_tree = min(max_tree, n_links)
+    sinc = _random_sinc(rng, n_sources, n_links, max_tree)
+    w = jnp.asarray(rng.integers(0, 1000, n_sources).astype(np.float32))
+    dense = np.asarray(w) @ sinc.dense()                 # oracle einsum
+
+    ref = np.asarray(link_loads_ref(w, jnp.asarray(sinc.link_ids),
+                                    jnp.asarray(sinc.src_of_entry),
+                                    n_links))
+    np.testing.assert_array_equal(ref, dense)
+
+    csr = np.asarray(link_loads_csr(w, jnp.asarray(sinc.link_ids),
+                                    jnp.asarray(sinc.src_of_entry),
+                                    n_links=n_links))
+    np.testing.assert_array_equal(csr, dense)
+
+    cols, inv = sinc.device_col_plan()
+    got = np.asarray(link_loads_cols(w, cols, inv, n_links=n_links))
+    np.testing.assert_array_equal(got, dense)
+
+    src_sorted, link_ptr = sinc.csc
+    pal = np.asarray(link_loads_csc(w, jnp.asarray(src_sorted),
+                                    jnp.asarray(link_ptr),
+                                    n_links=n_links))
+    np.testing.assert_array_equal(pal, dense)
+
+
+def test_batched_layouts_match():
+    rng = np.random.default_rng(0)
+    sinc = _random_sinc(rng, 20, 30, 6)
+    w = jnp.asarray(rng.integers(0, 50, (7, 20)).astype(np.float32))
+    ref = np.asarray(link_loads_ref(w, jnp.asarray(sinc.link_ids),
+                                    jnp.asarray(sinc.src_of_entry), 30))
+    assert ref.shape == (7, 30)
+    cols, inv = sinc.device_col_plan()
+    got = np.asarray(link_loads_cols(w, cols, inv, n_links=30))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_prefix_sum_kernel_matches_cumsum():
+    rng = np.random.default_rng(1)
+    for rows in (BLOCK_ROWS, 3 * BLOCK_ROWS):
+        x = rng.integers(0, 100, (rows, LANES)).astype(np.float32)
+        got = np.asarray(flat_prefix_sum_pallas(jnp.asarray(x)))
+        want = np.cumsum(x.reshape(-1)).reshape(rows, LANES)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_empty_incidence():
+    sinc = SparseIncidence(link_ids=np.empty(0, np.int32),
+                           source_ptr=np.zeros(5, np.int64), n_links=8,
+                           tree_hops=np.zeros(4, np.int32))
+    w = jnp.ones(4)
+    np_cols, np_inv = sinc.col_plan
+    got = np.asarray(link_loads_cols(w, tuple(np_cols),
+                                     jnp.asarray(np_inv), n_links=8))
+    np.testing.assert_array_equal(got, np.zeros(8))
+    src_sorted, link_ptr = sinc.csc
+    pal = np.asarray(link_loads_csc(w, jnp.asarray(src_sorted),
+                                    jnp.asarray(link_ptr), n_links=8))
+    np.testing.assert_array_equal(pal, np.zeros(8))

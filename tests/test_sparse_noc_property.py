@@ -1,0 +1,26 @@
+"""Hypothesis property suite for the sparse NoC path: for ARBITRARY
+random ``NetGraph``s, sparse link/flit loads and traffic energy are
+exactly the dense einsum's, and the arithmetic tree builder matches the
+seed's per-destination route walk."""
+import numpy as np
+import pytest
+
+from test_sparse_noc import (assert_incidence_matches_route_walk,
+                             assert_sparse_equals_dense, random_graph)
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 2**31 - 1))
+def test_sparse_loads_bitwise_equal_dense(graph_seed, packet_seed):
+    graph = random_graph(np.random.default_rng(graph_seed))
+    assert_sparse_equals_dense(graph, packet_seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_sparse_incidence_matches_route_walk(graph_seed):
+    assert_incidence_matches_route_walk(
+        random_graph(np.random.default_rng(graph_seed)))
