@@ -1,0 +1,152 @@
+"""Board-scale benchmark: one ``NetGraph`` compiled across multi-chip
+SpiNNaker 2 boards (the numbers behind BENCH_pr4.json).
+
+For each (workload class, board) pair this reports, separately:
+
+  build_s      — graph construction (weights, drive tables; not ours)
+  partition_s  — min-cut-flavored population -> chip assignment
+  compile_s    — per-chip snake placement + hierarchical routing into
+                 the board-wide CSR incidence (sub-quadratic in total
+                 PEs: O(sum of stitched tree sizes))
+  tick_us      — engine wall time per tick through the auto-selected
+                 sparse NoC path (one lax.scan for the whole board)
+  xchip_*      — the traffic split: share of flits / NoC energy riding
+                 the expensive chip-to-chip tier, peak chip-to-chip
+                 link flits vs. capacity
+
+The headline configuration is the 48-chip board (``--boards 4x12
+--chip 4x2`` = 1536 PEs) running the hybrid NEF->event-MAC farm; the
+default sweep walks 1x1 -> 2x2 -> 4x6 -> 4x12 so compile-time scaling
+is visible in one artifact.  ``--profile-links`` additionally records
+per-link peak/mean loads (cheap off the sparse records) — the real
+traffic profiles the congestion-aware-routing roadmap item needs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import RESULTS, emit, time_call
+from repro.board import BoardSpec, compile_board, partition
+from repro.chip.chip import ChipSim, chip_power_table
+from repro.chip.workloads import (dnn_board_graph, hybrid_farm_board_graph,
+                                  synfire_board_graph)
+
+# per-core neuron counts scaled down from Table II so a 1536-PE ring's
+# weight tensors stay in laptop memory (same scaling as chip_scale.py)
+from benchmarks.chip_scale import SCALED_SYNFIRE
+
+BUILDERS = {
+    "synfire": lambda b: synfire_board_graph(b, sp=SCALED_SYNFIRE),
+    "dnn": dnn_board_graph,
+    "hybrid": hybrid_farm_board_graph,
+}
+
+# per-link profiles land here; --json writes them next to the rows
+LINK_PROFILES: dict = {}
+
+
+def bench_board(cls: str, board: BoardSpec, n_ticks: int = 64,
+                compile_budget_s: float | None = None,
+                profile_links: bool = False) -> None:
+    t0 = time.perf_counter()
+    graph = BUILDERS[cls](board)
+    build_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    part = partition(graph, board)
+    partition_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    prog = compile_board(graph, board, part=part)
+    compile_s = time.perf_counter() - t0
+    if compile_budget_s is not None and \
+            partition_s + compile_s > compile_budget_s:
+        raise RuntimeError(
+            f"{cls}@{board.chips_x}x{board.chips_y}: partition+compile "
+            f"took {partition_s + compile_s:.2f}s > budget "
+            f"{compile_budget_s:.2f}s")
+
+    sim = ChipSim(prog)
+    runner = jax.jit(lambda: sim.run(n_ticks))
+    tick_us = time_call(runner, warmup=1, iters=3) / n_ticks
+    recs = jax.block_until_ready(sim.run(n_ticks))
+    tab = chip_power_table(sim, recs)
+
+    flits = np.asarray(recs["link_flits"])
+    name = (f"board_{cls}_{board.chips_x}x{board.chips_y}chips_"
+            f"{prog.n_pes}pe")
+    x = tab["noc"].get("xchip", {})
+    emit(name, tick_us,
+         f"chips={board.n_chips};chip={board.chip.width}x"
+         f"{board.chip.height};pes={prog.n_pes};links={prog.noc.n_links};"
+         f"xlinks={prog.noc.n_xchip_links};nnz={prog.sinc.nnz};"
+         f"density={prog.sinc.density:.5f};cut_flits={part.cut_flits:.0f};"
+         f"build_s={build_s:.3f};partition_s={partition_s:.3f};"
+         f"compile_s={compile_s:.3f};"
+         f"xchip_flit_frac={x.get('flits_frac', 0.0):.4f};"
+         f"xchip_energy_frac={x.get('energy_frac', 0.0):.4f};"
+         f"peak_xlink_flits={x.get('peak_xlink_flits', 0.0):.0f};"
+         f"peak_link_flits={tab['noc']['peak_link_flits']:.0f};"
+         f"noc_power_mw={tab['noc']['power_mw']:.4f};"
+         f"worst_hops={prog.worst_tree_hops}")
+
+    if profile_links:
+        # the congestion-aware-routing seed: real per-link profiles,
+        # split at the tier boundary (ids >= n_onchip are chip-to-chip)
+        LINK_PROFILES[name] = {
+            "n_onchip_links": int(prog.noc.n_onchip_links),
+            "peak": np.round(flits.max(axis=0), 2).tolist(),
+            "mean": np.round(flits.mean(axis=0), 4).tolist(),
+        }
+
+
+def main(boards=("1x1", "2x2", "4x6", "4x12"), chip: str = "4x2",
+         classes=("hybrid", "synfire", "dnn"), n_ticks: int = 64,
+         compile_budget_s: float | None = None,
+         profile_links: bool = False) -> None:
+    for cls in classes:
+        for i, b in enumerate(boards):
+            spec = BoardSpec.parse(b, chip=chip)
+            bench_board(cls, spec, n_ticks=n_ticks,
+                        compile_budget_s=compile_budget_s,
+                        # profiles only for each class's largest board
+                        profile_links=profile_links
+                        and i == len(boards) - 1)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--boards", default="1x1,2x2,4x6,4x12",
+                    help="comma list of chip grids, e.g. 2x2,4x12")
+    ap.add_argument("--chip", default="4x2",
+                    help="per-chip QPE mesh, e.g. 4x2 (= 32 PEs)")
+    ap.add_argument("--classes", default="hybrid,synfire,dnn")
+    ap.add_argument("--ticks", type=int, default=64)
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="fail if any partition+compile exceeds this")
+    ap.add_argument("--profile-links", action="store_true",
+                    help="record per-link peak/mean load profiles")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    main(boards=tuple(args.boards.split(",")), chip=args.chip,
+         classes=tuple(args.classes.split(",")), n_ticks=args.ticks,
+         compile_budget_s=args.budget_s, profile_links=args.profile_links)
+
+    if args.json:
+        import json
+        import platform
+        from pathlib import Path
+        payload = {"rows": RESULTS, "link_profiles": LINK_PROFILES,
+                   "jax_version": jax.__version__,
+                   "python": platform.python_version(),
+                   "platform": platform.platform()}
+        path = Path(args.json)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(payload, indent=1))
+        print(f"# wrote {len(RESULTS)} rows to {path}")

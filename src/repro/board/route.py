@@ -1,0 +1,318 @@
+"""Hierarchical board routing: one ``NetGraph`` -> ``BoardProgram``.
+
+``compile_board(graph, board)`` is the board-level twin of
+``repro.chip.compile.compile``: it partitions the graph across chips
+(``repro.board.partition``), snake-places each chip's populations with
+the SAME slot arithmetic the single-chip compiler uses, and stitches
+each source's multicast route hierarchically:
+
+* **on the source chip** — the ordinary X/Y multicast tree from the
+  source tile to its local destinations PLUS the border port QPEs of
+  every outgoing chip-to-chip direction the packet needs;
+* **across chips** — an X-first multicast tree at CHIP granularity (the
+  same trunk-and-branches arithmetic, one level up): each edge is one
+  chip-to-chip link;
+* **on every other chip the tree touches** — an X/Y tree from the entry
+  port QPE to that chip's local destinations and onward exit ports.
+
+All stitched link ids land in ONE board-wide CSR ``SparseIncidence``
+over ``BoardNoc``'s global link space, so the unchanged ``ChipSim``
+tick loop — dense einsum or sparse column-plan/Pallas kernels — runs
+the whole board, with per-tier flit/energy accounting riding on the
+``xlink_mask``/``tree_links_x`` split.
+
+Golden anchor: a 1x1 board IS the single-chip path — same slot
+assignment, same snake coords, same link enumeration, same CSR — so
+``compile_board(g, BoardSpec(1, 1, chip=mesh))`` is bit-identical to
+``compile(g, mesh)`` end to end (tests/test_board.py).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.board.partition import Partition, partition
+from repro.board.spec import (BoardNoc, BoardSpec, DIR_STEP, OPPOSITE)
+from repro.chip.compile import (ChipProgram, check_tile_sram,
+                                source_packet_classes)
+from repro.chip.graph import NetGraph
+from repro.chip.mapping import assign_slots, snake_coords
+from repro.chip.mesh_noc import MeshSpec, SparseIncidence
+from repro.core.noc import xy_route
+from repro.core.pe import PESpec
+from repro.core.router import RoutingTable
+
+
+def _dir_of(a: tuple, b: tuple) -> str:
+    step = (b[0] - a[0], b[1] - a[1])
+    for d, s in DIR_STEP.items():
+        if s == step:
+            return d
+    raise ValueError(f"chips {a} and {b} are not adjacent")
+
+
+def chip_tree(board: BoardSpec, src_chip: int, dst_chips) -> dict:
+    """X-first multicast tree over the chip grid.
+
+    Returns {chip index: (entry_dir | None, sorted exit dirs)} for every
+    chip the tree touches (the union of the X-first chip-level routes is
+    a tree: each non-source chip has exactly one entry side).
+    """
+    nodes: dict = {src_chip: [None, set()]}
+    sc = board.chip_coord(src_chip)
+    for c in sorted(set(dst_chips)):
+        if c == src_chip:
+            continue
+        for a, b in xy_route(sc, board.chip_coord(c)):
+            ca, cb = board.chip_index(*a), board.chip_index(*b)
+            d = _dir_of(a, b)
+            nodes[ca][1].add(d)
+            if cb not in nodes:
+                nodes[cb] = [OPPOSITE[d], set()]
+    return {c: (entry, sorted(exits)) for c, (entry, exits)
+            in nodes.items()}
+
+
+def _manhattan(a, b) -> int:
+    return abs(int(a[0]) - int(b[0])) + abs(int(a[1]) - int(b[1]))
+
+
+@dataclass
+class BoardProgram(ChipProgram):
+    """A compiled board workload — a ``ChipProgram`` whose link space
+    spans every chip plus the chip-to-chip tier.
+
+    ``coords`` are board-global QPE coordinates (chip origin at
+    (cx * W, cy * H)) for reporting; routing used ``coords_local`` +
+    ``chip_of_pe``.  Runs on the unchanged ``ChipSim``.
+    """
+    board: Optional[BoardSpec] = None
+    part: Optional[Partition] = None
+    chip_of_pe: Optional[np.ndarray] = None      # (P,) chip index per PE
+    coords_local: Optional[np.ndarray] = None    # (P, 2) within-chip QPE
+    tree_links_x: Optional[np.ndarray] = None    # (P,) chip-to-chip links
+    # (P, 2) [on-chip hops, chip-to-chip hops] of each source's
+    # latency-critical delivery path — ONE real path's split, chosen with
+    # each tier at its own hop cost (NOT independent maxima, which could
+    # pair hops from two different destinations into a path that does
+    # not exist)
+    path_hops: Optional[np.ndarray] = None
+
+    @property
+    def energy_tree_links(self) -> np.ndarray:
+        """(P, 2) [on-chip, chip-to-chip] per-source link split — what
+        the tiered ``BoardNoc.traffic_energy_j`` prices."""
+        return np.stack([self.sinc.tree_links - self.tree_links_x,
+                         self.tree_links_x], axis=-1)
+
+    @property
+    def tree_hops_x(self) -> np.ndarray:
+        """(P,) chip-to-chip hops of each source's latency-critical
+        path."""
+        return self.path_hops[:, 1]
+
+    @functools.cached_property
+    def worst_path_latency_s(self) -> float:
+        """Worst multicast delivery latency with each tier at its own
+        hop cost (the single-chip ``hop_latency_s`` generalized)."""
+        if not len(self.path_hops):
+            return 0.0
+        lat = self.noc.path_latency_s(self.path_hops[:, 0].astype(float),
+                                      self.path_hops[:, 1].astype(float))
+        return float(np.max(lat))
+
+
+def compile_board(graph: NetGraph, board: Optional[BoardSpec] = None,
+                  pe: PESpec = PESpec(), part: Optional[Partition] = None,
+                  refine: bool = True) -> BoardProgram:
+    """Compile ``graph`` onto a multi-chip ``board``.
+
+    ``board=None`` auto-sizes a near-square grid of the default 2x2-QPE
+    chips.  ``part`` lets callers reuse / inspect a partition; otherwise
+    ``repro.board.partition.partition`` runs (with ``refine``).
+    Raises ``ValueError`` up front for SRAM / capacity violations, naming
+    the population at fault (same contract as the single-chip compiler).
+    """
+    if graph.semantics is None:
+        raise ValueError(f"graph {graph.name!r} has no tick semantics; "
+                         "attach one before compiling")
+    check_tile_sram(graph, pe)
+
+    if board is None and part is not None:
+        board = part.board
+    if part is not None and part.board != board:
+        raise ValueError(
+            f"partition was built for a {part.board.chips_x}x"
+            f"{part.board.chips_y} board of {part.board.chip.width}x"
+            f"{part.board.chip.height} chips, not this board — "
+            f"re-partition or pass the matching BoardSpec")
+    if board is None:
+        chip = MeshSpec(2, 2)
+        for pop in graph.populations:       # unsatisfiable regardless of grid
+            if assign_slots([pop], chip.pes_per_qpe)[1] > chip.n_pes:
+                raise ValueError(
+                    f"population {pop.name!r} needs more PE slots than one "
+                    f"{chip.width}x{chip.height} QPE chip holds; pass an "
+                    f"explicit BoardSpec with a bigger chip mesh")
+        total = assign_slots(graph.populations, chip.pes_per_qpe)[1]
+        side = max(1, int(np.ceil(np.sqrt(-(-total // chip.n_pes)))))
+        while part is None:                 # grow until fragmentation fits
+            board = BoardSpec(side, side, chip=chip)
+            try:
+                part = partition(graph, board, refine=refine)
+            except ValueError:
+                side += 1
+    part = part or partition(graph, board, refine=refine)
+    noc = BoardNoc(board)
+    chip_mesh = board.chip
+
+    # -- placement: snake within each chip, logical PEs in graph order ----
+    pe_slices: dict = {}
+    cur = 0
+    for pop in graph.populations:
+        pe_slices[pop.name] = slice(cur, cur + pop.n_tiles)
+        cur += pop.n_tiles
+    n_pes = cur
+
+    coords_local = np.zeros((n_pes, 2), np.int32)
+    chip_of_pe = np.zeros(n_pes, np.int32)
+    for c, pops in enumerate(part.chip_pops):
+        if not pops:
+            continue
+        slots, _ = assign_slots(pops, chip_mesh.pes_per_qpe)
+        pe_slot = []
+        for pop in pops:
+            a, b = slots[pop.name]
+            pe_slot.extend(range(a, b))
+        local = snake_coords(chip_mesh, pe_slot)
+        off = 0
+        for pop in pops:
+            sl = pe_slices[pop.name]
+            coords_local[sl] = local[off:off + pop.n_tiles]
+            chip_of_pe[sl] = c
+            off += pop.n_tiles
+    chip_xy = np.array([board.chip_coord(c) for c in chip_of_pe])
+    coords = coords_local + chip_xy * np.array(
+        [chip_mesh.width, chip_mesh.height])
+
+    # -- routing table + packet classes (same contract as compile()) ------
+    out_bits = source_packet_classes(graph)
+    masks = np.zeros((n_pes, n_pes), bool)
+    payload_bits = np.zeros(n_pes, np.int64)
+    for pr in graph.projections:
+        masks[pe_slices[pr.src], pe_slices[pr.dst]] = True
+        payload_bits[pe_slices[pr.src]] = out_bits[pr.src]
+    table = RoutingTable(masks)
+
+    # -- hierarchical incidence: per population, shared by its tiles ------
+    rows: list = [None] * n_pes
+    hops = np.zeros(n_pes, np.int32)
+    tl_x = np.zeros(n_pes, np.int64)
+    path_hops = np.zeros((n_pes, 2), np.int32)
+    empty = np.empty((0, 2), np.int64)
+
+    dst_slices: dict = {p.name: [] for p in graph.populations}
+    for pr in graph.projections:
+        dst_slices[pr.src].append(pe_slices[pr.dst])
+
+    for pop in graph.populations:
+        sl = pe_slices[pop.name]
+        src_chip = int(chip_of_pe[sl.start])
+        # destination PEs grouped by chip, projection order preserved
+        # (a 1x1 board concatenates exactly like the single-chip compiler)
+        dst_pe = (np.concatenate([np.arange(s.start, s.stop)
+                                  for s in dst_slices[pop.name]])
+                  if dst_slices[pop.name] else np.empty(0, np.int64))
+        by_chip: dict = {}
+        for p in dst_pe:
+            by_chip.setdefault(int(chip_of_pe[p]), []).append(
+                coords_local[p])
+        tree = chip_tree(board, src_chip, by_chip.keys())
+
+        # tile-independent part: entry trees + outgoing xlinks of every
+        # non-source chip, plus the source chip's own outgoing xlinks
+        ext_parts: list = []
+        n_x = 0
+        for c in sorted(tree):
+            entry, exits = tree[c]
+            if c == src_chip:
+                ext_parts.append(np.array(
+                    [noc.xlink_id(c, d) for d in exits], np.int32))
+                n_x += len(exits)
+                continue
+            targets = ([np.asarray(by_chip.get(c, empty), np.int64)
+                        .reshape(-1, 2)]
+                       + [np.asarray([board.port(d)], np.int64)
+                          for d in exits])
+            t = np.concatenate(targets) if targets else empty
+            # ``entry`` is already the side the packet arrives on (the
+            # chip-tree stores OPPOSITE[travel direction])
+            ids = noc.chip_noc.tree_link_ids(board.port(entry), t)
+            ext_parts.append(ids + noc.chip_link_base(c))
+            ext_parts.append(np.array(
+                [noc.xlink_id(c, d) for d in exits], np.int32))
+            n_x += len(exits)
+        ext = (np.concatenate(ext_parts).astype(np.int32) if ext_parts
+               else np.empty(0, np.int32))
+
+        # per-destination-chip path costs shared by every source tile:
+        # (first exit direction, hops beyond the source chip)
+        local_dst = np.asarray(by_chip.get(src_chip, empty),
+                               np.int64).reshape(-1, 2)
+        remote: list = []
+        sc_xy = board.chip_coord(src_chip)
+        for c in sorted(by_chip):
+            if c == src_chip:
+                continue
+            path = xy_route(sc_xy, board.chip_coord(c))
+            dirs = [_dir_of(a, b) for a, b in path]
+            h = len(path)                       # one hop per xlink
+            for i in range(1, len(path)):       # intermediate chips
+                h += _manhattan(board.port(OPPOSITE[dirs[i - 1]]),
+                                board.port(dirs[i]))
+            entry = board.port(OPPOSITE[dirs[-1]])
+            h += max(_manhattan(entry, d) for d in by_chip[c])
+            remote.append((dirs[0], h, len(path)))
+
+        # per-tile rows: local tree to local dests + exit ports, then ext
+        src_exits = tree[src_chip][1]
+        src_targets = np.concatenate(
+            [local_dst] + [np.asarray([board.port(d)], np.int64)
+                           for d in src_exits]) if (
+            len(local_dst) or src_exits) else empty
+        base = noc.chip_link_base(src_chip)
+        for p in range(sl.start, sl.stop):
+            t_xy = coords_local[p]
+            local_ids = noc.chip_noc.tree_link_ids(t_xy, src_targets)
+            rows[p] = np.concatenate([local_ids + base, ext]) \
+                if ext.size else local_ids + base
+            h_local = int(np.abs(local_dst - t_xy).sum(axis=1).max()) \
+                if len(local_dst) else 0
+            # candidate delivery paths as (on-chip, chip-to-chip) hop
+            # pairs — ``h`` counts every hop beyond the source chip, x
+            # of which are chip-to-chip, so on-chip = tile part + h - x
+            cands = [(h_local, 0)] + [
+                (_manhattan(t_xy, board.port(d0)) + h - x, x)
+                for d0, h, x in remote]
+            hops[p] = max(on + x for on, x in cands)    # worst hop DEPTH
+            # latency-critical path: the pair maximizing tiered latency
+            path_hops[p] = max(
+                cands, key=lambda c: noc.path_latency_s(c[0], c[1]))
+            tl_x[p] = n_x
+
+    sinc = SparseIncidence.from_rows(rows, noc.n_links, hops)
+
+    sram = np.zeros(n_pes, np.int64)
+    for pop in graph.populations:
+        sram[pe_slices[pop.name]] = pop.sram_bytes
+
+    return BoardProgram(graph=graph, mesh=chip_mesh, noc=noc,
+                        coords=coords.astype(np.int32), table=table,
+                        sinc=sinc, payload_bits=payload_bits,
+                        sram_bytes=sram, pe_slices=pe_slices,
+                        board=board, part=part, chip_of_pe=chip_of_pe,
+                        coords_local=coords_local, tree_links_x=tl_x,
+                        path_hops=path_hops)

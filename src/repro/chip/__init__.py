@@ -27,7 +27,12 @@ Modules:
   per-PE activity-driven DVFS and chip-level power tables.
 * ``workloads`` — graph builders: synfire ring of any length, tiled
   feedforward DNN pipeline, hybrid NEF + event-driven-MAC pipeline (and
-  its board-scale ``hybrid_farm_graph`` of independent channels).
+  its board-scale ``hybrid_farm_graph`` of independent channels), plus
+  ``*_board_graph`` variants sized to a multi-chip board.
+
+One level up, ``repro.board`` compiles a ``NetGraph`` across a whole
+grid of chips (``compile_board``) into a program this same ``ChipSim``
+engine runs unchanged — see ``src/repro/board/``.
 """
 from repro.chip.mesh_noc import MeshNoc, MeshSpec, SparseIncidence
 from repro.chip.mapping import Placement, place_ring, place_layers

@@ -36,7 +36,7 @@ import numpy as np
 
 from repro.chip.compile import ChipProgram
 from repro.chip.mesh_noc import (DENSE_DENSITY, MAX_SPARSE_COLS,
-                                 MIN_SPARSE_LINKS, MeshNoc, MeshSpec,
+                                 MIN_SPARSE_LINKS, MeshNoc,
                                  SPIKE_PACKET_BITS)
 from repro.core.dvfs import DVFSController
 from repro.core.energy import PEEnergyModel
@@ -44,16 +44,22 @@ from repro.core.energy import PEEnergyModel
 
 @dataclass
 class ChipSim:
-    """A compiled workload program on a full PE mesh.
+    """A compiled workload program on a full PE mesh (or, for a
+    ``repro.board.BoardProgram``, a whole multi-chip board — the engine
+    is identical; only the incidence and the NoC pricing differ).
 
     ``noc_mode`` selects the NoC accounting representation: "auto" picks
     sparse vs dense by incidence density, "sparse"/"dense" force it (the
     two agree bitwise — forcing is for benchmarks and golden tests).
+    ``link_load_impl`` overrides the program NoC's sparse accumulation
+    kernel (None defers to the NoC's own knob: "auto" -> the CPU column
+    plan; "pallas" -> the prefix-sum kernel, interpret-mode on CPU).
     """
     program: ChipProgram
     dvfs: Optional[DVFSController] = None
     em: PEEnergyModel = field(default_factory=PEEnergyModel)
     noc_mode: str = "auto"
+    link_load_impl: Optional[str] = None
 
     def __post_init__(self):
         if self.dvfs is None:
@@ -67,21 +73,6 @@ class ChipSim:
     @property
     def noc(self) -> MeshNoc:
         return self.program.noc
-
-    @staticmethod
-    def synfire(n_pes: int = 8, mesh: MeshSpec | None = None, seed: int = 0,
-                **build_kw) -> "ChipSim":
-        """DEPRECATED shim: build + compile a synfire ring in one call.
-
-        New code should go through the graph API
-        (``workloads.synfire_graph`` -> ``compile`` -> ``ChipSim``); this
-        constructor survives for the existing call sites and stays
-        bit-identical to the paper's 8-PE test-chip benchmark.
-        """
-        from repro.chip.compile import compile as compile_graph
-        from repro.chip.workloads import synfire_graph
-        graph = synfire_graph(n_pes=n_pes, seed=seed, **build_kw)
-        return ChipSim(program=compile_graph(graph, mesh))
 
     def use_sparse_noc(self, noc_mode: str | None = None) -> bool:
         """Resolve the accounting representation for this program.
@@ -101,8 +92,8 @@ class ChipSim:
                     and sinc.max_fan_in <= MAX_SPARSE_COLS)
         return mode == "sparse"
 
-    def run(self, n_ticks: int, seed: int = 1,
-            noc_mode: str | None = None) -> dict:
+    def run(self, n_ticks: int, seed: int = 1, noc_mode: str | None = None,
+            link_load_impl: str | None = None) -> dict:
         """Per-tick records: everything the program's semantics reports
         (spike rasters / layer occupancy / decoded signals, PLs, Eq. (1)
         energies), plus the engine's NoC accounting:
@@ -112,36 +103,62 @@ class ChipSim:
                                   multi-flit packets weigh more)
         e_noc      (T,)         — NoC traffic energy per tick [J]
 
+        and, when the program's NoC is tiered (a board: on-chip links plus
+        chip-to-chip links), the per-tier split:
+
+        load_xchip / flits_xchip (T,) — packet/flit traversals of
+                                  chip-to-chip links this tick
+        e_noc_xchip (T,)        — chip-to-chip share of e_noc [J]
+
         ``noc_mode`` overrides the sim's representation choice per run;
-        sparse and dense produce bit-identical records.  For the synfire
-        program the neuron dynamics are the SAME tick function the
-        single-chip path scans (``make_synfire_tick``), so an 8-PE ChipSim
-        reproduces ``simulate_synfire`` rasters bit for bit.
+        sparse and dense produce bit-identical records, as do the sparse
+        kernels selected by ``link_load_impl``.  For the synfire program
+        the neuron dynamics are the SAME tick function the single-chip
+        path scans (``make_synfire_tick``), so an 8-PE ChipSim reproduces
+        ``simulate_synfire`` rasters bit for bit.
         """
         prog = self.program
         tick = prog.make_tick(dvfs=self.dvfs, em=self.em,
                               key=jax.random.PRNGKey(seed))
         noc = self.noc
-        # incidence onto the device ONCE, outside the per-tick closure
+        # incidence onto the device ONCE, outside the per-tick closure.
+        # The kernel knob is validated even when the dense einsum wins
+        # (a typo'd impl must error, not silently benchmark dense).
+        impl = noc.resolve_link_load_impl(link_load_impl
+                                          or self.link_load_impl)
         sparse = self.use_sparse_noc(noc_mode)
         if sparse:
-            cols, inv_perm = prog.sinc.device_col_plan()
+            plan = noc.device_plan(prog.sinc, impl=impl)
         else:
             inc = jnp.asarray(prog.inc)
-        tree_links = jnp.asarray(prog.tree_links, jnp.float32)  # (P,)
+        tree_links = jnp.asarray(prog.energy_tree_links, jnp.float32)
         static_pb = jnp.asarray(prog.payload_bits)
+        # tiered (board) NoC: static per-link tier mask + per-source
+        # chip-to-chip tree link counts, hoisted like the incidence.
+        # A 1x1 board has no chip-to-chip tier — its records (and traced
+        # ops) stay exactly the single-chip engine's, keeping the golden
+        # anchor bitwise.
+        tiered = getattr(noc, "n_xchip_links", 0) > 0
+        if tiered:
+            xmask = jnp.asarray(noc.xlink_mask, jnp.float32)
+            tree_links_x = jnp.asarray(prog.tree_links_x, jnp.float32)
 
         def chip_tick(state, t):
             state, rec = tick(state, t)
             packets = rec["packets"].astype(jnp.float32)    # (P,)
             pb = rec.get("payload_bits", static_pb)
             if sparse:
-                rec["link_load"], rec["link_flits"] = noc.noc_loads_sparse(
-                    packets, cols, inv_perm, pb)
+                rec["link_load"], rec["link_flits"] = noc.noc_loads(
+                    packets, plan, pb)
             else:
                 rec["link_load"] = noc.link_loads(packets, inc)
                 rec["link_flits"] = noc.flit_loads(packets, inc, pb)
             rec["e_noc"] = noc.traffic_energy_j(packets, tree_links, pb)
+            if tiered:
+                rec["load_xchip"] = (rec["link_load"] * xmask).sum(axis=-1)
+                rec["flits_xchip"] = (rec["link_flits"] * xmask).sum(axis=-1)
+                rec["e_noc_xchip"] = noc.xchip_energy_j(packets,
+                                                        tree_links_x, pb)
             return state, rec
 
         _, recs = jax.lax.scan(chip_tick, prog.init_state(),
@@ -186,6 +203,44 @@ def chip_power_table(sim: ChipSim, recs: dict,
             sim.program.worst_tree_hops),
         "n_links": sim.noc.n_links,
     }
-    return {"per_pe": per_pe, "chip": chip, "noc": noc,
-            "n_pes": P, "mesh": (sim.program.mesh.width,
-                                 sim.program.mesh.height)}
+    # tiered (board) NoC: split the accounting into on-chip vs
+    # chip-to-chip shares — the headline number of the board benchmark
+    if "flits_xchip" in recs:
+        xmask = np.asarray(sim.noc.xlink_mask) > 0
+        x_flits = float(np.asarray(recs["flits_xchip"]).sum())
+        tot_flits = float(flits.sum())
+        e_x = float(np.asarray(recs["e_noc_xchip"]).sum())
+        e_tot = float(e_noc.sum())
+        peak_x = (float(flits[:, xmask].max())
+                  if xmask.any() and flits.size else 0.0)
+        # the chip-to-chip tier has its own (slower) flit clock, so it
+        # saturates long before its flit counts rival on-chip links
+        xspec = sim.noc.xspec
+        cap_x = t_sys_s * xspec.freq_hz / xspec.hop_cycles
+        noc["xchip"] = {
+            "n_links": int(xmask.sum()),
+            "flits": x_flits,
+            "flits_frac": x_flits / tot_flits if tot_flits else 0.0,
+            "energy_frac": e_x / e_tot if e_tot else 0.0,
+            "power_mw": float(np.asarray(recs["e_noc_xchip"]).mean()
+                              / t_sys_s * 1e3),
+            "peak_xlink_flits": peak_x,
+            "link_capacity_flits": cap_x,
+            "peak_utilization": peak_x / cap_x,
+        }
+        # tier-aware roll-ups: worst latency prices each tier at its own
+        # hop cost (one real path's split — BoardProgram.path_hops), and
+        # utilization is the worse of the two tiers' peaks vs their own
+        # capacities (on-chip-only constants would understate the SerDes
+        # tier by ~8x)
+        peak_on = (float(flits[:, ~xmask].max())
+                   if (~xmask).any() and flits.size else 0.0)
+        noc["peak_utilization"] = max(peak_on / cap_flits, peak_x / cap_x)
+        noc["worst_hop_latency_s"] = sim.program.worst_path_latency_s
+    out = {"per_pe": per_pe, "chip": chip, "noc": noc,
+           "n_pes": P, "mesh": (sim.program.mesh.width,
+                                sim.program.mesh.height)}
+    board = getattr(sim.program, "board", None)
+    if board is not None:
+        out["board"] = (board.chips_x, board.chips_y)
+    return out

@@ -33,7 +33,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.chip.graph import GRADED, NetGraph
-from repro.chip.mapping import snake_coords
+from repro.chip.mapping import assign_slots, snake_coords
 from repro.chip.mesh_noc import MeshNoc, MeshSpec, SparseIncidence
 from repro.core.pe import PESpec
 from repro.core.router import RoutingTable
@@ -67,6 +67,14 @@ class ChipProgram:
         """(P,) multicast-tree link count per source (== inc.sum(axis=1))."""
         return self.sinc.tree_links
 
+    @property
+    def energy_tree_links(self) -> np.ndarray:
+        """Per-source link counts the engine prices NoC energy with.  A
+        single-chip program has one link tier, so this is ``tree_links``;
+        a ``BoardProgram`` returns a (P, 2) [on-chip, chip-to-chip] split
+        that its tiered ``BoardNoc.traffic_energy_j`` consumes."""
+        return self.tree_links
+
     @functools.cached_property
     def worst_tree_hops(self) -> int:
         return int(self.sinc.tree_hops.max(initial=0))
@@ -89,23 +97,35 @@ class ChipProgram:
                                               key=key)
 
 
-def _assign_slots(graph: NetGraph, pes_per_qpe: int) -> tuple:
-    """Map population tiles to consecutive placement slots.
-
-    Returns (slots_per_pop: dict name -> (start, stop), total_slots).
-    ``align_qpe`` populations start on a QPE boundary and reserve whole
-    QPEs, so inter-population traffic crosses real mesh links.
-    """
-    slots = {}
-    cur = 0
+def check_tile_sram(graph: NetGraph, pe: PESpec) -> None:
+    """SRAM constraint per population tile, with an error naming the
+    population (shared by the single-chip and board compilers)."""
     for pop in graph.populations:
-        if pop.align_qpe and cur % pes_per_qpe:
-            cur += pes_per_qpe - cur % pes_per_qpe
-        slots[pop.name] = (cur, cur + pop.n_tiles)
-        cur += pop.n_tiles
-        if pop.align_qpe and cur % pes_per_qpe:
-            cur += pes_per_qpe - cur % pes_per_qpe
-    return slots, cur
+        if pop.sram_bytes > pe.sram_bytes:
+            raise ValueError(
+                f"population {pop.name!r}: per-tile state {pop.sram_bytes} B"
+                f" exceeds the {pe.sram_bytes} B PE SRAM — split it into "
+                f"more tiles")
+
+
+def source_packet_classes(graph: NetGraph) -> dict:
+    """Per-source-population payload bits (0 = spike packet).
+
+    Packet class is per SOURCE (one multicast tree per source PE): a
+    population mixing spike and graded out-edges — or two graded sizes —
+    would be silently mispriced over the union tree, so reject it here.
+    Shared by the single-chip and board compilers.
+    """
+    out_bits: dict = {}
+    for pr in graph.projections:
+        bits = pr.bits_per_packet if pr.payload == GRADED else 0
+        prev = out_bits.setdefault(pr.src, bits)
+        if prev != bits:
+            raise ValueError(
+                f"population {pr.src!r} mixes packet classes on its "
+                f"out-projections ({prev} vs {bits} payload bits); split "
+                f"it into one population per packet class")
+    return out_bits
 
 
 def compile(graph: NetGraph, mesh: MeshSpec | None = None,
@@ -120,16 +140,11 @@ def compile(graph: NetGraph, mesh: MeshSpec | None = None,
                          "attach one before compiling")
 
     # SRAM constraint per population tile (before any placement work)
-    for pop in graph.populations:
-        if pop.sram_bytes > pe.sram_bytes:
-            raise ValueError(
-                f"population {pop.name!r}: per-tile state {pop.sram_bytes} B"
-                f" exceeds the {pe.sram_bytes} B PE SRAM — split it into "
-                f"more tiles")
+    check_tile_sram(graph, pe)
 
     pes_per_qpe = (mesh.pes_per_qpe if mesh is not None
                    else MeshSpec.for_pes(1).pes_per_qpe)
-    slots, total_slots = _assign_slots(graph, pes_per_qpe)
+    slots, total_slots = assign_slots(graph.populations, pes_per_qpe)
     mesh = mesh or MeshSpec.for_pes(total_slots)
 
     # mesh capacity, with a clear error instead of a deep placement failure
@@ -156,18 +171,7 @@ def compile(graph: NetGraph, mesh: MeshSpec | None = None,
 
     coords = snake_coords(mesh, pe_slot)
 
-    # packet class is per SOURCE (one multicast tree per source PE): a
-    # population mixing spike and graded out-edges — or two graded sizes —
-    # would be silently mispriced over the union tree, so reject it here
-    out_bits: dict = {}
-    for pr in graph.projections:
-        bits = pr.bits_per_packet if pr.payload == GRADED else 0
-        prev = out_bits.setdefault(pr.src, bits)
-        if prev != bits:
-            raise ValueError(
-                f"population {pr.src!r} mixes packet classes on its "
-                f"out-projections ({prev} vs {bits} payload bits); split "
-                f"it into one population per packet class")
+    out_bits = source_packet_classes(graph)
 
     # routing: every tile of src multicasts to every tile of dst
     masks = np.zeros((n_pes, n_pes), bool)

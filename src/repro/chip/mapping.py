@@ -41,7 +41,28 @@ def snake_coords(mesh: MeshSpec, slots) -> np.ndarray:
     the graph compiler (``repro.chip.compile``)."""
     qpe_order = snake_order(mesh)
     return np.array([mesh.qpe_coord(qpe_order[s // mesh.pes_per_qpe])
-                     for s in slots], np.int32)
+                     for s in slots], np.int32).reshape(-1, 2)
+
+
+def assign_slots(populations, pes_per_qpe: int) -> tuple:
+    """Map population tiles to consecutive placement slots.
+
+    Returns (slots_per_pop: dict name -> (start, stop), total_slots).
+    ``align_qpe`` populations start on a QPE boundary and reserve whole
+    QPEs, so inter-population traffic crosses real mesh links.  Shared by
+    the single-chip compiler (``repro.chip.compile``) and the board
+    partitioner/placer (``repro.board``), which runs it once per chip.
+    """
+    slots = {}
+    cur = 0
+    for pop in populations:
+        if pop.align_qpe and cur % pes_per_qpe:
+            cur += pes_per_qpe - cur % pes_per_qpe
+        slots[pop.name] = (cur, cur + pop.n_tiles)
+        cur += pop.n_tiles
+        if pop.align_qpe and cur % pes_per_qpe:
+            cur += pes_per_qpe - cur % pes_per_qpe
+    return slots, cur
 
 
 @dataclass

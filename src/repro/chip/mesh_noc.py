@@ -31,9 +31,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.noc import NocSpec, xy_route
-from repro.kernels.link_load.ops import link_loads_cols
+from repro.kernels.link_load.ops import link_loads_cols, link_loads_csc
 
 SPIKE_PACKET_BITS = 64        # header-only DNoC spike packet (core/noc.py)
+
+# selectable sparse accumulation kernels: the CPU column plan (bucketed
+# gathers + prefix adds) or the Pallas sorted-segment prefix-sum kernel
+# (interpret mode on CPU, compiled on a real TPU target); "auto" resolves
+# to the column plan, the engine's measured-fastest CPU path
+LINK_LOAD_IMPLS = ("auto", "column_plan", "pallas")
 
 # incidence density above which the dense einsum beats the gather +
 # segment-sum (small meshes / near-broadcast traffic); ChipSim.run uses it
@@ -206,11 +212,152 @@ class SparseIncidence:
         return m
 
 
+class NocAccounting:
+    """Per-tick NoC accounting over a CSR/dense multicast incidence.
+
+    Shared by the on-chip ``MeshNoc`` and the board-level
+    ``repro.board.BoardNoc``: anything with a ``spec`` (``NocSpec``), an
+    ``n_links`` link count and a ``link_load_impl`` knob prices traffic
+    the same way, so single-chip and board programs run on one engine.
+    All methods are traced inside the engine's scan; none hold state.
+    """
+
+    # -- sparse kernel selection ------------------------------------------
+
+    def resolve_link_load_impl(self, impl: str | None = None) -> str:
+        """Resolve the sparse accumulation kernel ("auto" -> the CPU
+        column plan; "pallas" selects the sorted-segment prefix-sum
+        kernel, interpret-mode on CPU)."""
+        impl = impl or getattr(self, "link_load_impl", "auto")
+        if impl not in LINK_LOAD_IMPLS:
+            raise ValueError(f"unknown link_load_impl {impl!r}; "
+                             f"expected one of {LINK_LOAD_IMPLS}")
+        return "column_plan" if impl == "auto" else impl
+
+    def device_plan(self, sinc: "SparseIncidence",
+                    impl: str | None = None) -> tuple:
+        """Device-resident per-tick plan for ``noc_loads``: a tagged
+        layout matching the selected kernel.  Hoist ONCE per program,
+        outside the tick closure."""
+        impl = self.resolve_link_load_impl(impl)
+        if impl == "column_plan":
+            return ("column_plan", sinc.device_col_plan())
+        src_sorted, link_ptr = sinc.csc
+        return ("pallas", (jnp.asarray(src_sorted), jnp.asarray(link_ptr)))
+
+    def noc_loads(self, packets, plan, payload_bits):
+        """One tick's (link_loads, flit_loads) through the plan built by
+        ``device_plan`` — the engine's sparse hot path, kernel-agnostic.
+        Both kernels sum the same exact integer-valued terms per link, so
+        every impl agrees bitwise with the dense einsum."""
+        kind, data = plan
+        if kind == "column_plan":
+            cols, inv_perm = data
+            return self.noc_loads_sparse(packets, cols, inv_perm,
+                                         payload_bits)
+        src_sorted, link_ptr = data
+        pk = packets.astype(jnp.float32)
+        w = pk * self.packet_flits(payload_bits)
+        ll = link_loads_csc(pk, src_sorted, link_ptr, n_links=self.n_links)
+        fl = link_loads_csc(w, src_sorted, link_ptr, n_links=self.n_links)
+        return ll, fl
+
+    # -- per-tick accounting (traced; dense or CSR) -----------------------
+
+    def link_loads(self, packets, inc) -> jnp.ndarray:
+        """packets: (..., n_sources) packet counts emitted per source this
+        tick; inc: (n_sources, n_links).  Returns (..., n_links) loads."""
+        return jnp.einsum("...p,pl->...l", packets.astype(jnp.float32),
+                          jnp.asarray(inc))
+
+    def link_loads_sparse(self, packets, buckets, inv_perm):
+        """Sparse twin of ``link_loads``: bucketed column gathers +
+        prefix adds — O(nnz) instead of the dense O(P * n_links), with no
+        scatter in the hot path.
+
+        ``buckets``/``inv_perm`` are ``SparseIncidence.col_plan`` (pass
+        device index arrays, hoisted out of tick loops).  Bitwise-equal
+        to the dense einsum on integer-valued counts."""
+        return link_loads_cols(packets.astype(jnp.float32), buckets,
+                               inv_perm, n_links=self.n_links)
+
+    def spike_energy_j(self, loads) -> jnp.ndarray:
+        """Energy of header-only spike packets from total link traversals."""
+        return (loads.sum(axis=-1) * SPIKE_PACKET_BITS
+                * self.spec.pj_per_bit_hop * 1e-12)
+
+    # -- typed packet classes (graded payloads over the DNoC) --------------
+
+    def packet_flits(self, payload_bits) -> jnp.ndarray:
+        """Flits per packet given per-source payload bits (0 = header-only
+        spike packet = 1 flit; graded = ceil(bits / 128) flits)."""
+        pb = jnp.asarray(payload_bits)
+        return jnp.where(pb > 0, -(-pb // self.spec.payload_bits), 1)
+
+    def packet_bits(self, payload_bits) -> jnp.ndarray:
+        """Bits on the wire per link traversal of one packet: 64 b for a
+        spike packet, ceil(bits/128) flits of 192 b for graded payloads."""
+        pb = jnp.asarray(payload_bits)
+        return jnp.where(pb > 0, self.packet_flits(pb) * self.spec.flit_bits,
+                         SPIKE_PACKET_BITS)
+
+    def flit_loads(self, packets, inc, payload_bits) -> jnp.ndarray:
+        """Per-link flit traffic: each source's packets weighted by its
+        packet's flit count before hitting the incidence tensor."""
+        w = packets.astype(jnp.float32) * self.packet_flits(payload_bits)
+        return jnp.einsum("...p,pl->...l", w, jnp.asarray(inc))
+
+    def flit_loads_sparse(self, packets, buckets, inv_perm, payload_bits):
+        """Sparse twin of ``flit_loads`` (same column plan as
+        ``link_loads_sparse``)."""
+        w = packets.astype(jnp.float32) * self.packet_flits(payload_bits)
+        return link_loads_cols(w, buckets, inv_perm, n_links=self.n_links)
+
+    def noc_loads_sparse(self, packets, buckets, inv_perm, payload_bits):
+        """One tick's (link_loads, flit_loads) through one fused column
+        pass — the column-plan sparse hot path."""
+        pk = packets.astype(jnp.float32)
+        w = jnp.stack([pk, pk * self.packet_flits(payload_bits)])
+        both = link_loads_cols(w, buckets, inv_perm, n_links=self.n_links)
+        return both[0], both[1]
+
+    def traffic_energy_j(self, packets, tree_links, payload_bits):
+        """Energy of one tick's multicast traffic, packet-class aware.
+
+        packets (..., P) packets emitted per source; tree_links (P,) link
+        count of each source's multicast tree (``SparseIncidence.
+        tree_links`` == inc.sum(axis=1)); payload_bits (..., P) or (P,).
+        Spike packets cost 64 b per link traversal, graded packets cost
+        their flit footprint.  Representation-independent: both the dense
+        and the sparse engine path call this with the same inputs.
+        """
+        bits = (packets.astype(jnp.float32)
+                * jnp.asarray(tree_links, jnp.float32)
+                * self.packet_bits(payload_bits))
+        return bits.sum(axis=-1) * self.spec.pj_per_bit_hop * 1e-12
+
+    def congestion(self, loads) -> jnp.ndarray:
+        """Peak per-link load (packets / tick) — the SpiNNCer-style traffic
+        bottleneck metric."""
+        return loads.max(axis=-1)
+
+    def link_capacity_packets(self, t_window_s: float,
+                              packet_bits: int = SPIKE_PACKET_BITS) -> float:
+        """Packets one link can carry in ``t_window_s`` at the NoC clock."""
+        flits = -(-packet_bits // self.spec.payload_bits)
+        cycles_per_packet = self.spec.hop_cycles * flits
+        return t_window_s * self.spec.freq_hz / cycles_per_packet
+
+    def hop_latency_s(self, n_hops) -> float:
+        return n_hops * self.spec.hop_cycles / self.spec.freq_hz
+
+
 @dataclass
-class MeshNoc:
+class MeshNoc(NocAccounting):
     """Link enumeration + incidence construction + vectorized accounting."""
     mesh: MeshSpec
     spec: NocSpec = field(default_factory=NocSpec)
+    link_load_impl: str = "auto"       # sparse kernel: see LINK_LOAD_IMPLS
 
     def __post_init__(self):
         links = []
@@ -329,92 +476,3 @@ class MeshNoc:
         """Worst-case hop depth of the multicast tree (packet latency)."""
         return max((abs(src[0] - d[0]) + abs(src[1] - d[1]) for d in dsts),
                    default=0)
-
-    # -- per-tick accounting (traced; dense or CSR) -----------------------
-
-    def link_loads(self, packets, inc) -> jnp.ndarray:
-        """packets: (..., n_sources) packet counts emitted per source this
-        tick; inc: (n_sources, n_links).  Returns (..., n_links) loads."""
-        return jnp.einsum("...p,pl->...l", packets.astype(jnp.float32),
-                          jnp.asarray(inc))
-
-    def link_loads_sparse(self, packets, buckets, inv_perm):
-        """Sparse twin of ``link_loads``: bucketed column gathers +
-        prefix adds — O(nnz) instead of the dense O(P * n_links), with no
-        scatter in the hot path.
-
-        ``buckets``/``inv_perm`` are ``SparseIncidence.col_plan`` (pass
-        device index arrays, hoisted out of tick loops).  Bitwise-equal
-        to the dense einsum on integer-valued counts."""
-        return link_loads_cols(packets.astype(jnp.float32), buckets,
-                               inv_perm, n_links=self.n_links)
-
-    def spike_energy_j(self, loads) -> jnp.ndarray:
-        """Energy of header-only spike packets from total link traversals."""
-        return (loads.sum(axis=-1) * SPIKE_PACKET_BITS
-                * self.spec.pj_per_bit_hop * 1e-12)
-
-    # -- typed packet classes (graded payloads over the DNoC) --------------
-
-    def packet_flits(self, payload_bits) -> jnp.ndarray:
-        """Flits per packet given per-source payload bits (0 = header-only
-        spike packet = 1 flit; graded = ceil(bits / 128) flits)."""
-        pb = jnp.asarray(payload_bits)
-        return jnp.where(pb > 0, -(-pb // self.spec.payload_bits), 1)
-
-    def packet_bits(self, payload_bits) -> jnp.ndarray:
-        """Bits on the wire per link traversal of one packet: 64 b for a
-        spike packet, ceil(bits/128) flits of 192 b for graded payloads."""
-        pb = jnp.asarray(payload_bits)
-        return jnp.where(pb > 0, self.packet_flits(pb) * self.spec.flit_bits,
-                         SPIKE_PACKET_BITS)
-
-    def flit_loads(self, packets, inc, payload_bits) -> jnp.ndarray:
-        """Per-link flit traffic: each source's packets weighted by its
-        packet's flit count before hitting the incidence tensor."""
-        w = packets.astype(jnp.float32) * self.packet_flits(payload_bits)
-        return jnp.einsum("...p,pl->...l", w, jnp.asarray(inc))
-
-    def flit_loads_sparse(self, packets, buckets, inv_perm, payload_bits):
-        """Sparse twin of ``flit_loads`` (same column plan as
-        ``link_loads_sparse``)."""
-        w = packets.astype(jnp.float32) * self.packet_flits(payload_bits)
-        return link_loads_cols(w, buckets, inv_perm, n_links=self.n_links)
-
-    def noc_loads_sparse(self, packets, buckets, inv_perm, payload_bits):
-        """One tick's (link_loads, flit_loads) through one fused column
-        pass — the engine's sparse hot path."""
-        pk = packets.astype(jnp.float32)
-        w = jnp.stack([pk, pk * self.packet_flits(payload_bits)])
-        both = link_loads_cols(w, buckets, inv_perm, n_links=self.n_links)
-        return both[0], both[1]
-
-    def traffic_energy_j(self, packets, tree_links, payload_bits):
-        """Energy of one tick's multicast traffic, packet-class aware.
-
-        packets (..., P) packets emitted per source; tree_links (P,) link
-        count of each source's multicast tree (``SparseIncidence.
-        tree_links`` == inc.sum(axis=1)); payload_bits (..., P) or (P,).
-        Spike packets cost 64 b per link traversal, graded packets cost
-        their flit footprint.  Representation-independent: both the dense
-        and the sparse engine path call this with the same inputs.
-        """
-        bits = (packets.astype(jnp.float32)
-                * jnp.asarray(tree_links, jnp.float32)
-                * self.packet_bits(payload_bits))
-        return bits.sum(axis=-1) * self.spec.pj_per_bit_hop * 1e-12
-
-    def congestion(self, loads) -> jnp.ndarray:
-        """Peak per-link load (packets / tick) — the SpiNNCer-style traffic
-        bottleneck metric."""
-        return loads.max(axis=-1)
-
-    def link_capacity_packets(self, t_window_s: float,
-                              packet_bits: int = SPIKE_PACKET_BITS) -> float:
-        """Packets one link can carry in ``t_window_s`` at the NoC clock."""
-        flits = -(-packet_bits // self.spec.payload_bits)
-        cycles_per_packet = self.spec.hop_cycles * flits
-        return t_window_s * self.spec.freq_hz / cycles_per_packet
-
-    def hop_latency_s(self, n_hops) -> float:
-        return n_hops * self.spec.hop_cycles / self.spec.freq_hz

@@ -1,0 +1,132 @@
+"""Hypothesis property suite for the board partitioner + hierarchical
+router: for ARBITRARY random ``NetGraph``s on ARBITRARY board shapes,
+
+* per-chip PE-slot capacity (the per-chip SRAM budget) is never exceeded
+  and every tile's state fits the 128 kB PE SRAM,
+* every projection is routed — each source's stitched link set walks to
+  every destination PE across however many chips the partition spread
+  them over, entering each chip on exactly ONE chip-to-chip link (so
+  flits are conserved across chip boundaries: multicast duplicates at
+  branch points, never rejoins),
+* the board-wide sparse accounting is bitwise the dense einsum's, and
+  the tier split sums exactly.
+"""
+import numpy as np
+import pytest
+
+from test_sparse_noc import random_graph
+
+pytest.importorskip("hypothesis")
+from hypothesis import assume, given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.board import BoardSpec, compile_board, partition
+from repro.chip.mapping import assign_slots
+from repro.chip.mesh_noc import MeshSpec
+from repro.core.pe import PESpec
+
+
+def random_board(rng) -> BoardSpec:
+    return BoardSpec(int(rng.integers(1, 4)), int(rng.integers(1, 3)),
+                     chip=MeshSpec(int(rng.integers(1, 4)),
+                                   int(rng.integers(1, 3))))
+
+
+def compiled(graph_seed, board_seed):
+    rng = np.random.default_rng(graph_seed)
+    graph = random_graph(rng)
+    board = random_board(np.random.default_rng(board_seed))
+    try:
+        return compile_board(graph, board), board
+    except ValueError:
+        assume(False)                    # graph does not fit this board
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 2**31 - 1))
+def test_partition_never_exceeds_chip_capacity(graph_seed, board_seed):
+    prog, board = compiled(graph_seed, board_seed)
+    part = prog.part
+    pe = PESpec()
+    for pops, used in zip(part.chip_pops, part.slots_used):
+        assert used == assign_slots(pops, board.chip.pes_per_qpe)[1]
+        assert used <= board.chip.n_pes
+        for pop in pops:
+            assert pop.sram_bytes <= pe.sram_bytes
+    # every population assigned exactly once, tiles contiguous per chip
+    names = [p.name for pops in part.chip_pops for p in pops]
+    assert sorted(names) == sorted(p.name for p in prog.graph.populations)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 2**31 - 1))
+def test_every_projection_routed_and_boundary_conserving(graph_seed,
+                                                         board_seed):
+    prog, board = compiled(graph_seed, board_seed)
+    noc = prog.noc
+    for p in range(prog.n_pes):
+        a, b = prog.sinc.source_ptr[p], prog.sinc.source_ptr[p + 1]
+        ids = prog.sinc.link_ids[a:b]
+        assert len(set(ids.tolist())) == len(ids)      # tree: links distinct
+        links = [noc.link_endpoints(int(l)) for l in ids]
+        # chip-boundary conservation: each non-source chip is entered on
+        # exactly one chip-to-chip link — a packet's flits arrive once
+        entries: dict = {}
+        for l in ids:
+            if l >= noc.n_onchip_links:
+                (c0, _), (c1, _) = noc.link_endpoints(int(l))
+                entries[c1] = entries.get(c1, 0) + 1
+        assert all(v == 1 for v in entries.values()), entries
+        assert int(prog.tree_links_x[p]) == len(entries)
+        # connectivity: the stitched tree reaches every destination PE
+        reach = {(int(prog.chip_of_pe[p]), tuple(prog.coords_local[p]))}
+        grew = True
+        while grew:
+            grew = False
+            for (c0, u), (c1, v) in links:
+                if (c0, tuple(u)) in reach and (c1, tuple(v)) not in reach:
+                    reach.add((c1, tuple(v)))
+                    grew = True
+        for q in np.flatnonzero(prog.table.masks[p]):
+            assert (int(prog.chip_of_pe[q]),
+                    tuple(prog.coords_local[q])) in reach, (p, q)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 2**31 - 1),
+       st.integers(0, 2**31 - 1))
+def test_board_sparse_bitwise_equals_dense_and_tier_split(graph_seed,
+                                                          board_seed,
+                                                          packet_seed):
+    prog, board = compiled(graph_seed, board_seed)
+    noc = prog.noc
+    rng = np.random.default_rng(packet_seed)
+    packets = jnp.asarray(rng.integers(0, 200, prog.n_pes)
+                          .astype(np.float32))
+    pb = jnp.asarray(prog.payload_bits)
+    dense_ll = np.asarray(noc.link_loads(packets, prog.inc))
+    dense_fl = np.asarray(noc.flit_loads(packets, prog.inc, pb))
+    for impl in ("column_plan", "pallas"):
+        ll, fl = noc.noc_loads(packets, noc.device_plan(prog.sinc, impl),
+                               pb)
+        np.testing.assert_array_equal(np.asarray(ll), dense_ll, err_msg=impl)
+        np.testing.assert_array_equal(np.asarray(fl), dense_fl, err_msg=impl)
+    # tree_links bookkeeping: CSR row lengths == dense row sums, split
+    # into tiers by the xlink mask
+    np.testing.assert_array_equal(prog.sinc.tree_links,
+                                  prog.inc.sum(axis=1))
+    xmask = np.asarray(noc.xlink_mask)
+    np.testing.assert_array_equal(prog.tree_links_x,
+                                  (prog.inc * xmask).sum(axis=1))
+    # tiered energy == hand-priced tiers (f64 reference)
+    e = np.asarray(noc.traffic_energy_j(
+        packets, jnp.asarray(prog.energy_tree_links, jnp.float32), pb),
+        np.float64)
+    pbits = np.asarray(noc.packet_bits(pb), np.float64)
+    pk = np.asarray(packets, np.float64)
+    on = (pk * (prog.sinc.tree_links - prog.tree_links_x) * pbits).sum()
+    xc = (pk * prog.tree_links_x * pbits).sum()
+    ref = (on * noc.spec.pj_per_bit_hop
+           + xc * noc.xspec.pj_per_bit_hop) * 1e-12
+    np.testing.assert_allclose(float(e), ref, rtol=1e-5)

@@ -61,14 +61,10 @@ def test_dvfs_thresholds_flow_from_graph_to_engine():
     assert (sim.dvfs.l_th1, sim.dvfs.l_th2) == (5, 10)
 
 
-def test_synfire_shim_still_works():
-    """Deprecated ChipSim.synfire constructor routes through the graph
-    API and stays equivalent."""
-    sim = ChipSim.synfire(8)
-    recs = sim.run(120)
-    ref = simulate_synfire(build_synfire(0), 120)
-    assert np.array_equal(np.asarray(recs["spikes_exc"]),
-                          np.asarray(ref["spikes_exc"]))
+def test_synfire_shim_removed():
+    """The deprecated ``ChipSim.synfire`` shim (PR 2 kept it for one
+    cycle) is gone — the graph API is the one entry point."""
+    assert not hasattr(ChipSim, "synfire")
 
 
 # -------------------------------------------------------------------------

@@ -5,19 +5,21 @@ import numpy as np
 import pytest
 
 from repro.chip.chip import ChipSim, chip_power_table
-from repro.chip.workloads import hybrid_workload, tiled_dnn_workload
+from repro.chip.compile import compile as compile_graph
+from repro.chip.workloads import (hybrid_workload, synfire_graph,
+                                  tiled_dnn_workload)
 from repro.core.snn import build_synfire, simulate_synfire
 
 
 @pytest.fixture(scope="module")
 def chip8():
-    sim = ChipSim.synfire(8)
+    sim = ChipSim(compile_graph(synfire_graph(8)))
     return sim, sim.run(1200)
 
 
 @pytest.fixture(scope="module")
 def chip64():
-    sim = ChipSim.synfire(64)
+    sim = ChipSim(compile_graph(synfire_graph(64)))
     return sim, sim.run(700)
 
 
