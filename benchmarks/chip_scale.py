@@ -101,6 +101,11 @@ SCALED_SYNFIRE = dataclasses.replace(
 # template conv layer that splits into ~13 tiles under the 128 kB SRAM
 SCALE_DNN_LAYER = dict(h=64, w=64, cin=32, cout=64, kh=3, kw=3)
 
+# per-link profiles land here; --json writes them next to the rows
+# (parity with board_scale.py — the congestion-aware-routing roadmap item
+# consumes exactly these, single-chip meshes included)
+LINK_PROFILES: dict = {}
+
 
 def dnn_layers_for_pes(n_pes: int, pe: PESpec = PESpec()) -> list:
     """Repeat the template layer until the tiled stack fills ~n_pes PEs."""
@@ -124,7 +129,7 @@ def build_scaled_graph(cls: str, n_pes: int):
 def sweep(sizes=(256, 1024, 4096), n_ticks: int = 64,
           classes=("synfire", "dnn", "hybrid"),
           compile_budget_s: float | None = None,
-          noc_batch: int = 64) -> None:
+          noc_batch: int = 64, profile_links: bool = False) -> None:
     """Compile + run each workload class at each mesh size.
 
     Reported separately per (class, size):
@@ -134,6 +139,10 @@ def sweep(sizes=(256, 1024, 4096), n_ticks: int = 64,
       noc_sparse_us / noc_dense_us — per-tick link+flit accounting alone
                    (jit'd, warmed, batched over ``noc_batch`` ticks), the
                    sparse gather+segment-sum vs the dense einsum
+
+    ``profile_links`` records per-link peak/mean flit profiles for each
+    class's largest mesh (parity with ``board_scale.py``), feeding the
+    congestion-aware-routing roadmap item from single-chip runs too.
     """
     rng = np.random.default_rng(0)
     for cls in classes:
@@ -154,6 +163,17 @@ def sweep(sizes=(256, 1024, 4096), n_ticks: int = 64,
             sim = ChipSim(prog)
             runner = jax.jit(lambda: sim.run(n_ticks))
             tick_us = time_call(runner, warmup=1, iters=3) / n_ticks
+
+            if profile_links and n_pes == max(sizes):
+                # reuse the already-compiled runner — a fresh sim.run()
+                # would re-trace the whole scan at the largest mesh
+                flits = np.asarray(
+                    jax.block_until_ready(runner())["link_flits"])
+                LINK_PROFILES[f"scale_{cls}_{prog.n_pes}pe"] = {
+                    "n_onchip_links": int(prog.noc.n_links),
+                    "peak": np.round(flits.max(axis=0), 2).tolist(),
+                    "mean": np.round(flits.mean(axis=0), 4).tolist(),
+                }
 
             # NoC accounting alone, per tick inside a scan (how the engine
             # pays it): sparse column plan vs dense einsum
@@ -204,6 +224,9 @@ if __name__ == "__main__":
     ap.add_argument("--ticks", type=int, default=64)
     ap.add_argument("--budget-s", type=float, default=None,
                     help="fail if any compile exceeds this many seconds")
+    ap.add_argument("--profile-links", action="store_true",
+                    help="record per-link peak/mean load profiles for "
+                    "each class's largest mesh (parity with board_scale)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write rows as machine-readable JSON")
     args = ap.parse_args()
@@ -213,7 +236,8 @@ if __name__ == "__main__":
         sweep(sizes=tuple(int(s) for s in args.sweep.split(",")),
               n_ticks=args.ticks,
               classes=tuple(args.classes.split(",")),
-              compile_budget_s=args.budget_s)
+              compile_budget_s=args.budget_s,
+              profile_links=args.profile_links)
     else:
         main()
 
@@ -222,7 +246,8 @@ if __name__ == "__main__":
         import platform
         from pathlib import Path
         from benchmarks.common import RESULTS
-        payload = {"rows": RESULTS, "jax_version": jax.__version__,
+        payload = {"rows": RESULTS, "link_profiles": LINK_PROFILES,
+                   "jax_version": jax.__version__,
                    "python": platform.python_version(),
                    "platform": platform.platform()}
         path = Path(args.json)

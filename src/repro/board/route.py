@@ -44,6 +44,7 @@ from repro.chip.mesh_noc import MeshSpec, SparseIncidence
 from repro.core.noc import xy_route
 from repro.core.pe import PESpec
 from repro.core.router import RoutingTable
+from repro.learn.lower import lower_plasticity
 
 
 def _dir_of(a: tuple, b: tuple) -> str:
@@ -313,6 +314,7 @@ def compile_board(graph: NetGraph, board: Optional[BoardSpec] = None,
                         coords=coords.astype(np.int32), table=table,
                         sinc=sinc, payload_bits=payload_bits,
                         sram_bytes=sram, pe_slices=pe_slices,
+                        learn_slots=lower_plasticity(graph, pe_slices),
                         board=board, part=part, chip_of_pe=chip_of_pe,
                         coords_local=coords_local, tree_links_x=tl_x,
                         path_hops=path_hops)

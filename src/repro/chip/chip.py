@@ -103,6 +103,14 @@ class ChipSim:
                                   multi-flit packets weigh more)
         e_noc      (T,)         — NoC traffic energy per tick [J]
 
+        and, when the program has plastic projections (``learn_slots``),
+        the learning tier: weights/traces advance in the scan carry each
+        tick (``repro.learn.engine``) and
+
+        e_learn    (T, P)       — per-PE learning energy per tick [J]
+                                  (MAC-class weight updates + exp-
+                                  accelerator trace decays)
+
         and, when the program's NoC is tiered (a board: on-chip links plus
         chip-to-chip links), the per-tier split:
 
@@ -121,6 +129,25 @@ class ChipSim:
         tick = prog.make_tick(dvfs=self.dvfs, em=self.em,
                               key=jax.random.PRNGKey(seed))
         noc = self.noc
+        # on-mesh learning: programs with plastic projections extend the
+        # scan carry with per-slot weight/trace state, updated right after
+        # the semantics' tick and priced into a per-PE e_learn record.
+        # Frozen programs (learn_slots == ()) skip this entirely — the
+        # traced tick body is EXACTLY the pre-plasticity engine's.
+        # (import here: repro.learn.engine reaches back into repro.chip
+        # for the shared energy helpers)
+        if getattr(prog, "learn_slots", ()):
+            from repro.learn.engine import make_learn_step
+            learn = make_learn_step(prog)
+        else:
+            learn = None
+        init = prog.init_state()
+        if learn is not None and (not isinstance(init, dict)
+                                  or "learn" not in init):
+            raise ValueError(
+                f"graph {prog.graph.name!r} has plastic projections but "
+                "its semantics' init_state does not carry a 'learn' "
+                "subtree; include repro.learn.init_learn_state(program)")
         # incidence onto the device ONCE, outside the per-tick closure.
         # The kernel knob is validated even when the dense einsum wins
         # (a typo'd impl must error, not silently benchmark dense).
@@ -145,6 +172,10 @@ class ChipSim:
 
         def chip_tick(state, t):
             state, rec = tick(state, t)
+            if learn is not None:
+                lstate, e_learn = learn(state["learn"], rec)
+                state = {**state, "learn": lstate}
+                rec["e_learn"] = e_learn
             packets = rec["packets"].astype(jnp.float32)    # (P,)
             pb = rec.get("payload_bits", static_pb)
             if sparse:
@@ -161,8 +192,7 @@ class ChipSim:
                                                         tree_links_x, pb)
             return state, rec
 
-        _, recs = jax.lax.scan(chip_tick, prog.init_state(),
-                               jnp.arange(n_ticks))
+        _, recs = jax.lax.scan(chip_tick, init, jnp.arange(n_ticks))
         return recs
 
 
@@ -240,6 +270,20 @@ def chip_power_table(sim: ChipSim, recs: dict,
     out = {"per_pe": per_pe, "chip": chip, "noc": noc,
            "n_pes": P, "mesh": (sim.program.mesh.width,
                                 sim.program.mesh.height)}
+    # on-mesh learning: e_learn share of the total chip energy (datapath
+    # Eq. (1) terms + NoC traffic + learning) — the headline number of
+    # the plasticity benchmark
+    if "e_learn" in recs:
+        e_l = np.asarray(recs["e_learn"])
+        e_pe = sum(float(np.asarray(recs[k]).sum())
+                   for k in ("e_dvfs_baseline", "e_dvfs_neuron",
+                             "e_dvfs_synapse"))
+        tot = e_pe + float(e_noc.sum()) + float(e_l.sum())
+        out["learn"] = {
+            "power_mw": float(e_l.sum(axis=-1).mean() / t_sys_s * 1e3),
+            "energy_j": float(e_l.sum()),
+            "energy_frac": float(e_l.sum()) / tot if tot else 0.0,
+        }
     board = getattr(sim.program, "board", None)
     if board is not None:
         out["board"] = (board.chips_x, board.chips_y)

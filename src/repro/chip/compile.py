@@ -20,6 +20,9 @@ workload-agnostic engine needs:
   lazily only if something asks for it.
 * **packet classes** — per-source payload bits (0 = header-only spike
   packet; >0 = graded multi-flit packet) from the typed projections.
+* **learning** — projections carrying a ``plasticity=`` rule lower into
+  ``LearnSlot`` descriptors (``repro.learn.lower``); the engine turns
+  them into per-slot weight/trace carry state updated every tick.
 
 The resulting ``ChipProgram`` is a pure description: ``ChipSim`` executes
 it, ``chip_power_table`` accounts it, and the graph's ``TickSemantics``
@@ -37,6 +40,7 @@ from repro.chip.mapping import assign_slots, snake_coords
 from repro.chip.mesh_noc import MeshNoc, MeshSpec, SparseIncidence
 from repro.core.pe import PESpec
 from repro.core.router import RoutingTable
+from repro.learn.lower import lower_plasticity
 
 
 @dataclass
@@ -51,6 +55,7 @@ class ChipProgram:
     payload_bits: np.ndarray    # (P,) int: payload bits per packet (0=spike)
     sram_bytes: np.ndarray      # (P,) int: per-PE workload state
     pe_slices: dict             # population name -> slice of logical PEs
+    learn_slots: tuple = ()     # lowered plastic projections (repro.learn)
 
     @property
     def n_pes(self) -> int:
@@ -204,4 +209,5 @@ def compile(graph: NetGraph, mesh: MeshSpec | None = None,
 
     return ChipProgram(graph=graph, mesh=mesh, noc=noc, coords=coords,
                        table=table, sinc=sinc, payload_bits=payload_bits,
-                       sram_bytes=sram, pe_slices=pe_slices)
+                       sram_bytes=sram, pe_slices=pe_slices,
+                       learn_slots=lower_plasticity(graph, pe_slices))

@@ -69,12 +69,22 @@ class Projection:
     priced as ceil(bits / 128) flits of 192 bits per link traversal
     (paper Sec. III-A).  ``delay_ticks`` is the synaptic/transport delay the
     semantics honours between emission and arrival.
+
+    ``plasticity`` makes the projection trainable on-mesh: attach a
+    ``repro.learn.STDP`` (SPIKE projections) or ``repro.learn.PES``
+    (GRADED projections) descriptor and the compiler lowers it into a
+    ``LearnSlot`` on the program; the engine then updates the
+    projection's weights tick by tick inside the scan and reports the
+    per-PE learning energy as ``e_learn`` (see ``repro.learn``).  The
+    default ``None`` keeps the projection frozen — and the compiled
+    program bitwise identical to the pre-plasticity engine.
     """
     src: str
     dst: str
     payload: str = SPIKE
     bits_per_packet: int = 0
     delay_ticks: int = 1
+    plasticity: object = None
 
     def __post_init__(self):
         if self.payload not in (SPIKE, GRADED):

@@ -1,2 +1,4 @@
-from repro.kernels.explog.ops import fx_exp, fx_log, fx_exp_float, fx_log_float
+from repro.kernels.explog.ops import (EXPLOG_IMPLS, fx_exp, fx_exp_float,
+                                      fx_log, fx_log_float,
+                                      resolve_explog_impl)
 from repro.kernels.explog.ref import fx_exp_ref, fx_log_ref, FX_ONE

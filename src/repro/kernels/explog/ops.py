@@ -1,4 +1,15 @@
-"""jit'd wrappers: arbitrary shapes + float-facing helpers for the SNN stack."""
+"""jit'd wrappers: arbitrary shapes + float-facing helpers for the SNN stack.
+
+Both wrappers take an ``impl`` knob, mirroring the ``link_load_impl``
+convention of ``repro.chip.mesh_noc``: "pallas" selects the Pallas kernel
+(interpret-mode on CPU hosts, compiled on a real TPU target), "ref" the
+pure-jnp bit-exact oracle, and "auto" resolves to the measured-fastest
+CPU path — the reference, since interpret-mode Pallas pays a large
+per-call overhead.  The two implementations are BIT-IDENTICAL (enforced
+by tests/test_kernels_explog.py), so the knob only moves wall time; the
+engine's plasticity trace decay (``repro.learn``) selects "auto" so
+learning ticks stay fast on interpret-mode hosts.
+"""
 from __future__ import annotations
 
 import functools
@@ -9,7 +20,17 @@ import jax.numpy as jnp
 from repro.kernels.explog.explog import (
     BLOCK_ROWS, LANES, fx_exp_pallas, fx_log_pallas,
 )
-from repro.kernels.explog.ref import FX_ONE
+from repro.kernels.explog.ref import FX_ONE, fx_exp_ref, fx_log_ref
+
+EXPLOG_IMPLS = ("auto", "ref", "pallas")
+
+
+def resolve_explog_impl(impl: str) -> str:
+    """"auto" -> the reference path (fastest on interpret-mode hosts)."""
+    if impl not in EXPLOG_IMPLS:
+        raise ValueError(f"unknown explog impl {impl!r}; expected one of "
+                         f"{EXPLOG_IMPLS}")
+    return "ref" if impl == "auto" else impl
 
 
 def _shape_to_blocks(x):
@@ -22,17 +43,21 @@ def _shape_to_blocks(x):
     return flat.reshape(-1, LANES), n
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def fx_exp(x, interpret=True):
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def fx_exp(x, impl="auto", interpret=True):
     """x: int32 s16.15 any shape -> exp(x) int32 s16.15."""
+    if resolve_explog_impl(impl) == "ref":
+        return fx_exp_ref(jnp.asarray(x))
     x2d, n = _shape_to_blocks(x)
     out = fx_exp_pallas(x2d, interpret=interpret)
     return out.reshape(-1)[:n].reshape(x.shape)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def fx_log(x, interpret=True):
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def fx_log(x, impl="auto", interpret=True):
     """x: int32 s16.15 any shape, > 0 -> ln(x) int32 s16.15."""
+    if resolve_explog_impl(impl) == "ref":
+        return fx_log_ref(jnp.asarray(x))
     x2d, n = _shape_to_blocks(x)
     out = fx_log_pallas(x2d, interpret=interpret)
     return out.reshape(-1)[:n].reshape(x.shape)

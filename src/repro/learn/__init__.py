@@ -1,0 +1,29 @@
+"""On-mesh synaptic plasticity (paper Sec. III-B; Yan et al. 2009.08921).
+
+Projections of a ``NetGraph`` become trainable by attaching a rule:
+
+    from repro.learn import PES, STDP
+    Projection("nef0", "plant0", payload=GRADED, bits_per_packet=32,
+               plasticity=PES(learning_rate=3e-5))
+
+``compile``/``compile_board`` lower plastic projections into
+``LearnSlot`` descriptors on the program; ``ChipSim`` extends its scan
+carry with per-slot weight/trace state and applies the rule every tick
+(``repro.learn.engine``), pricing the work into a per-PE ``e_learn``
+record.  Rules live in ``repro.learn.rules`` (fixed-point path through
+the exp-accelerator kernel + float oracle); the closed-loop
+adaptive-control workload is in ``repro.learn.adaptive`` (imported as a
+submodule to keep this package import-light).
+"""
+from repro.learn.engine import init_learn_state, make_learn_step
+from repro.learn.lower import LearnSlot, lower_plasticity
+from repro.learn.rules import (EXP_ACC_CYCLES, PES, PLASTICITY_RULES, STDP,
+                               exp_op_energy_j, pes_step, stdp_step_fx,
+                               stdp_step_ref, trace_step_fx, trace_step_ref,
+                               trace_to_hz)
+
+__all__ = ["STDP", "PES", "PLASTICITY_RULES", "LearnSlot",
+           "lower_plasticity", "init_learn_state", "make_learn_step",
+           "trace_step_fx", "trace_step_ref", "trace_to_hz",
+           "stdp_step_fx", "stdp_step_ref", "pes_step",
+           "exp_op_energy_j", "EXP_ACC_CYCLES"]

@@ -1,0 +1,107 @@
+"""The engine side of on-mesh learning: carry init + per-tick update.
+
+``ChipSim.run`` calls ``make_learn_step`` once per program; the returned
+function runs INSIDE the per-tick scan, right after the semantics' tick,
+and is the only place weights mutate.  The contract with a learnable
+``TickSemantics`` is small:
+
+* its ``init_state`` includes ``state["learn"] = init_learn_state(prog)``
+  (it may overwrite individual weight arrays, e.g. pre-trained decoders);
+* its tick reads weights from ``state["learn"][slot.name]["w"]`` for the
+  forward pass and passes the ``"learn"`` subtree through UNCHANGED;
+* its per-tick ``rec`` reports, per slot ``s``,
+
+      learn/{s.name}/pre   (n_pre,)  pre-synaptic spikes this tick
+      learn/{s.name}/post  (n_post,) post spikes        (STDP only)
+      learn/{s.name}/err   (n_post,) arrived error      (PES only)
+
+The engine then advances eligibility traces through the s16.15 exp
+accelerator kernel, applies the rule (``repro.learn.rules``), and prices
+the tick's learning work — MAC-class weight updates + exp-accelerator
+trace decays — into a per-PE ``e_learn`` record charged to the slot's
+owning tiles.  A program with no plastic projections never reaches this
+module: ``ChipSim`` skips it entirely, keeping frozen graphs bitwise
+identical to the pre-plasticity engine.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.chip.graph import mac_dynamic_energy_j
+from repro.kernels.explog.ref import FX_ONE
+from repro.learn.rules import (exp_op_energy_j, pes_step, stdp_step_fx,
+                               trace_step_fx, trace_to_hz)
+
+
+def init_learn_state(program) -> dict:
+    """Fresh weight/trace arrays for every learn slot of ``program``.
+
+    PES decoders are float32 (Arm-core arithmetic), STDP weights and all
+    eligibility traces are int32 s16.15."""
+    out = {}
+    for s in program.learn_slots:
+        if s.kind == "pes":
+            out[s.name] = {
+                "w": jnp.full((s.n_pre, s.n_post), s.rule.w_init,
+                              jnp.float32),
+                "tr": jnp.zeros((s.n_pre,), jnp.int32),
+            }
+        else:
+            out[s.name] = {
+                "w": jnp.full((s.n_pre, s.n_post),
+                              int(round(s.rule.w_init * FX_ONE)),
+                              jnp.int32),
+                "pre_tr": jnp.zeros((s.n_pre,), jnp.int32),
+                "post_tr": jnp.zeros((s.n_post,), jnp.int32),
+            }
+    return out
+
+
+def _slot_signal(rec: dict, key: str, slot_name: str):
+    try:
+        return rec[key]
+    except KeyError:
+        raise KeyError(
+            f"plastic projection {slot_name!r} needs the semantics to "
+            f"report {key!r} in its per-tick rec (see repro.learn.engine "
+            f"docstring)") from None
+
+
+def make_learn_step(program):
+    """Per-tick learning update for ``program`` (traced in the scan).
+
+    Returns ``step(learn_state, rec) -> (learn_state, e_learn)`` with
+    ``e_learn`` the (P,) per-PE learning energy of this tick."""
+    slots = program.learn_slots
+    P = program.n_pes
+
+    def step(lstate, rec):
+        new = dict(lstate)
+        e = jnp.zeros(P, jnp.float32)
+        for s in slots:
+            st = lstate[s.name]
+            pre = _slot_signal(rec, f"learn/{s.name}/pre", s.name)
+            if s.kind == "pes":
+                err = _slot_signal(rec, f"learn/{s.name}/err", s.name)
+                tr = trace_step_fx(st["tr"], pre, s.rule.tau_ticks,
+                                   s.rule.impl)
+                act_hz = trace_to_hz(tr, s.rule.tau_ticks)
+                w = pes_step(st["w"], act_hz, err, s.rule, s.n_pre)
+                new[s.name] = {"w": w, "tr": tr}
+                # event-driven: a zero-error tick dispatches no updates
+                active = jnp.any(err != 0).astype(jnp.float32)
+                macs = active * float(s.n_pre * s.n_post)
+                n_exp = float(s.n_pre)
+            else:
+                post = _slot_signal(rec, f"learn/{s.name}/post", s.name)
+                w, ptr, qtr = stdp_step_fx(st["w"], st["pre_tr"],
+                                           st["post_tr"], pre, post, s.rule)
+                new[s.name] = {"w": w, "pre_tr": ptr, "post_tr": qtr}
+                macs = (pre.astype(jnp.float32).sum() * s.n_post
+                        + post.astype(jnp.float32).sum() * s.n_pre)
+                n_exp = float(s.n_pre + s.n_post)
+            e_slot = mac_dynamic_energy_j(macs) + exp_op_energy_j(n_exp)
+            e = e.at[jnp.asarray(s.pe_ids)].add(e_slot / len(s.pe_ids))
+        return new, e
+
+    return step

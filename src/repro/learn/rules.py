@@ -1,0 +1,188 @@
+"""Synaptic plasticity rules: trace-based STDP and error-driven PES.
+
+The paper motivates the PE's exponential-function accelerator explicitly
+as a speedup for synaptic plasticity (Sec. III-B, [10][11]); this module
+is the matching rule library.  Each rule exists twice:
+
+* a **fixed-point path** in s16.15, the on-PE arithmetic: eligibility
+  traces decay through the ``repro.kernels.explog`` accelerator kernel
+  (``fx_exp``, ``impl`` knob selecting the Pallas kernel or the bit-exact
+  reference — see ``EXPLOG_IMPLS``), weights and traces stay int32, and
+  every multiply uses the overflow-safe hi/lo split the LIF kernel uses;
+* a **float reference oracle** (``*_ref``) the fixed-point path is tested
+  against within s16.15 tolerance.
+
+Rule semantics (both paths, identical op order):
+
+``STDP`` — pair-based with pre/post eligibility traces.  Per tick the
+traces decay by exp(-1/tau) and accumulate this tick's spikes; then every
+post spike potentiates by ``a_plus * pre_trace`` and every pre spike
+depresses by ``a_minus * post_trace``; weights clip to
+[``w_min``, ``w_max``].  Weights are s16.15 (1.0 == ``FX_ONE``).
+
+``PES`` — the NEF's error-driven decoder rule (Yan et al.,
+arXiv:2009.08921 run it on this hardware for adaptive control):
+``d <- d - lr/n * a * e`` with ``a`` the low-pass-filtered activity in Hz
+(trace in s16.15, decayed through the same accelerator) and ``e`` the
+arrived error vector.  Zero error is an exact fixed point.  Decoders stay
+float32, as on the Arm core.
+
+Energy: each weight update is a MAC-class op (priced through the MAC-array
+TOPS/W like every other datapath op), each trace decay one accelerator
+evaluation of ``EXP_ACC_CYCLES`` shift-add iterations — the constants the
+engine's ``e_learn`` record is built from.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import paper
+from repro.kernels.explog.ops import fx_exp, resolve_explog_impl, to_fx
+from repro.kernels.explog.ref import FX_ONE
+from repro.kernels.lif.ref import fx_mul
+
+FRAC = 15
+
+# one exp-accelerator evaluation = one shift-add iteration per ln(1+2^-k)
+# table entry ([10] Partzsch et al. ISCAS'17 — 16-entry table in s16.15)
+EXP_ACC_CYCLES = 16
+
+
+@dataclass(frozen=True)
+class STDP:
+    """Pair-based spike-timing-dependent plasticity on a SPIKE projection.
+
+    Time constants are in ticks (1 tick = 1 ms system tick); weights and
+    bounds are in the float domain (converted to s16.15 internally).
+    ``impl`` selects the trace-decay exp kernel (``EXPLOG_IMPLS``)."""
+    a_plus: float = 0.02
+    a_minus: float = 0.022
+    tau_plus_ticks: float = 20.0
+    tau_minus_ticks: float = 20.0
+    w_min: float = 0.0
+    w_max: float = 1.0
+    w_init: float = 0.5
+    impl: str = "auto"
+
+    def __post_init__(self):
+        resolve_explog_impl(self.impl)
+        if not self.w_min <= self.w_init <= self.w_max:
+            raise ValueError(
+                f"STDP w_init {self.w_init} outside bounds "
+                f"[{self.w_min}, {self.w_max}]")
+
+
+@dataclass(frozen=True)
+class PES:
+    """Prescribed Error Sensitivity: error-driven NEF decoder learning on
+    a GRADED projection (the projection carries the decoded value; the
+    decoders being learned live on the source PE)."""
+    learning_rate: float = 1e-5
+    tau_ticks: float = 20.0            # activity-trace filter constant
+    w_init: float = 0.0
+    impl: str = "auto"
+
+    def __post_init__(self):
+        resolve_explog_impl(self.impl)
+
+
+PLASTICITY_RULES = (STDP, PES)
+
+
+# ---------------------------------------------------------------------------
+# Eligibility traces (s16.15 + float oracle)
+# ---------------------------------------------------------------------------
+
+def trace_decay_fx(tau_ticks: float, impl: str = "auto"):
+    """Per-tick decay factor exp(-1/tau) in s16.15 — computed BY the
+    exp accelerator kernel (evaluated inside the tick loop; XLA is free
+    to hoist the constant, the PE is not)."""
+    arg = to_fx(jnp.float32(-1.0 / tau_ticks))
+    return fx_exp(arg[None], impl=impl)[0]
+
+
+def trace_step_fx(tr, spikes, tau_ticks: float, impl: str = "auto"):
+    """tr: int32 s16.15 trace -> decayed + FX_ONE per spike.
+
+    ``fx_mul``'s hi/lo split keeps the decay multiply exact and
+    overflow-free for any non-negative int32 trace."""
+    d = trace_decay_fx(tau_ticks, impl=impl)
+    return fx_mul(tr.astype(jnp.int32), d) \
+        + spikes.astype(jnp.int32) * FX_ONE
+
+
+def trace_step_ref(tr, spikes, tau_ticks: float):
+    """Float oracle of ``trace_step_fx`` (same decay-then-add order)."""
+    return tr * np.float32(np.exp(-1.0 / tau_ticks)) \
+        + spikes.astype(jnp.float32)
+
+
+def trace_to_hz(tr_fx, tau_ticks: float):
+    """s16.15 trace -> filtered firing-rate estimate in Hz.
+
+    A trace accumulating 1.0 per spike with decay alpha has steady state
+    rate/(1 - alpha) in spikes/tick; scale by (1 - alpha) * 1000 to get
+    Hz — the unit NEF decoders are solved against."""
+    one_m_alpha = 1.0 - float(np.exp(-1.0 / tau_ticks))
+    return tr_fx.astype(jnp.float32) * (one_m_alpha * 1000.0 / FX_ONE)
+
+
+# ---------------------------------------------------------------------------
+# STDP weight update (s16.15 + float oracle)
+# ---------------------------------------------------------------------------
+
+def stdp_step_fx(w, pre_tr, post_tr, pre_spk, post_spk, rule: STDP):
+    """One tick of pair STDP in s16.15.
+
+    w (n_pre, n_post) int32; traces int32; spikes 0/1.  Returns
+    (w, pre_tr, post_tr) — traces already advanced by this tick."""
+    pre_tr = trace_step_fx(pre_tr, pre_spk, rule.tau_plus_ticks, rule.impl)
+    post_tr = trace_step_fx(post_tr, post_spk, rule.tau_minus_ticks,
+                            rule.impl)
+    ap = jnp.int32(round(rule.a_plus * FX_ONE))
+    am = jnp.int32(round(rule.a_minus * FX_ONE))
+    pre_i = pre_spk.astype(jnp.int32)
+    post_i = post_spk.astype(jnp.int32)
+    pot = fx_mul(pre_tr, ap)[:, None] * post_i[None, :]
+    dep = pre_i[:, None] * fx_mul(post_tr, am)[None, :]
+    w = jnp.clip(w + pot - dep,
+                 jnp.int32(round(rule.w_min * FX_ONE)),
+                 jnp.int32(round(rule.w_max * FX_ONE)))
+    return w, pre_tr, post_tr
+
+
+def stdp_step_ref(w, pre_tr, post_tr, pre_spk, post_spk, rule: STDP):
+    """Float oracle of ``stdp_step_fx`` (identical op order)."""
+    pre_tr = trace_step_ref(pre_tr, pre_spk, rule.tau_plus_ticks)
+    post_tr = trace_step_ref(post_tr, post_spk, rule.tau_minus_ticks)
+    pre_f = pre_spk.astype(jnp.float32)
+    post_f = post_spk.astype(jnp.float32)
+    pot = (rule.a_plus * pre_tr)[:, None] * post_f[None, :]
+    dep = pre_f[:, None] * (rule.a_minus * post_tr)[None, :]
+    w = jnp.clip(w + pot - dep, rule.w_min, rule.w_max)
+    return w, pre_tr, post_tr
+
+
+# ---------------------------------------------------------------------------
+# PES decoder update (float — decoders live on the Arm core)
+# ---------------------------------------------------------------------------
+
+def pes_step(dec, act_hz, err, rule: PES, n_pre: int):
+    """d <- d - lr/n * a e.  dec (n_pre, d); act_hz (n_pre,); err (d,).
+    Zero error is an exact fixed point (lr * a * 0 == 0)."""
+    return dec - (rule.learning_rate / n_pre) \
+        * act_hz[:, None] * err[None, :].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Energy pricing constants
+# ---------------------------------------------------------------------------
+
+def exp_op_energy_j(n_ops, pl: paper.PerfLevel = paper.PERF_LEVELS[2]):
+    """Energy of ``n_ops`` exp-accelerator evaluations: EXP_ACC_CYCLES
+    shift-add iterations each, priced at the PL's per-cycle baseline
+    energy (the accelerator shares the PE power domain)."""
+    return n_ops * EXP_ACC_CYCLES * pl.p_baseline_w / pl.freq_hz

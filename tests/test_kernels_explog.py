@@ -14,12 +14,23 @@ from repro.kernels.explog.ops import from_fx, to_fx
 
 def test_exp_bit_exact(rng):
     x = to_fx(rng.uniform(-12, 10.5, 8192))
-    assert bool(jnp.all(fx_exp(x) == fx_exp_ref(x)))
+    assert bool(jnp.all(fx_exp(x, impl="pallas") == fx_exp_ref(x)))
 
 
 def test_log_bit_exact(rng):
     x = to_fx(rng.uniform(1e-3, 6e4, 8192))
-    assert bool(jnp.all(fx_log(x) == fx_log_ref(x)))
+    assert bool(jnp.all(fx_log(x, impl="pallas") == fx_log_ref(x)))
+
+
+def test_impl_knob(rng):
+    """"auto" resolves to the reference path, "pallas" to the kernel —
+    bitwise identical either way; typos fail loudly."""
+    x = to_fx(rng.uniform(-6, 6, 512))
+    assert bool(jnp.all(fx_exp(x) == fx_exp(x, impl="pallas")))
+    y = to_fx(rng.uniform(1e-2, 100, 512))
+    assert bool(jnp.all(fx_log(y) == fx_log(y, impl="pallas")))
+    with pytest.raises(ValueError, match="unknown explog impl"):
+        fx_exp(x, impl="fastest")
 
 
 def test_exp_accuracy(rng):
