@@ -8,6 +8,7 @@ For each (workload class, board) pair this reports, separately:
   compile_s    — per-chip snake placement + hierarchical routing into
                  the board-wide CSR incidence (sub-quadratic in total
                  PEs: O(sum of stitched tree sizes))
+  jit_s        — first runner call (scan trace + XLA compile, cold)
   tick_us      — engine wall time per tick through the auto-selected
                  sparse NoC path (one lax.scan for the whole board)
   xchip_*      — the traffic split: share of flits / NoC energy riding
@@ -18,21 +19,20 @@ The headline configuration is the 48-chip board (``--boards 4x12
 --chip 4x2`` = 1536 PEs) running the hybrid NEF->event-MAC farm; the
 default sweep walks 1x1 -> 2x2 -> 4x6 -> 4x12 so compile-time scaling
 is visible in one artifact.  ``--profile-links`` additionally records
-per-link peak/mean loads (cheap off the sparse records) — the real
-traffic profiles the congestion-aware-routing roadmap item needs.
+per-link peak/mean loads through the whole-run link probes
+(``repro.obs``) — the real traffic profiles the congestion-aware-routing
+roadmap item needs.  ``--json`` writes a manifest-stamped artifact.
 """
 from __future__ import annotations
 
-import time
-
 import jax
-import numpy as np
 
-from benchmarks.common import RESULTS, emit, time_call
+from benchmarks.common import emit, time_call
 from repro.board import BoardSpec, compile_board, partition
 from repro.chip.chip import ChipSim, chip_power_table
 from repro.chip.workloads import (dnn_board_graph, hybrid_farm_board_graph,
                                   synfire_board_graph)
+from repro.obs import PhaseTimers, record_link_profile
 
 # per-core neuron counts scaled down from Table II so a 1536-PE ring's
 # weight tensors stay in laptop memory (same scaling as chip_scale.py)
@@ -44,38 +44,36 @@ BUILDERS = {
     "hybrid": hybrid_farm_board_graph,
 }
 
-# per-link profiles land here; --json writes them next to the rows
-LINK_PROFILES: dict = {}
-
 
 def bench_board(cls: str, board: BoardSpec, n_ticks: int = 64,
                 compile_budget_s: float | None = None,
-                profile_links: bool = False) -> None:
-    t0 = time.perf_counter()
-    graph = BUILDERS[cls](board)
-    build_s = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    part = partition(graph, board)
-    partition_s = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    prog = compile_board(graph, board, part=part)
-    compile_s = time.perf_counter() - t0
+                profile_links: bool = False) -> dict:
+    """One (class, board) row.  Returns ``{"name", "timers",
+    "link_profile"}`` so the caller can assemble the JSON artifact
+    without module-level globals."""
+    tm = PhaseTimers()
+    with tm.phase("build"):
+        graph = BUILDERS[cls](board)
+    with tm.phase("partition"):
+        part = partition(graph, board)
+    with tm.phase("compile"):
+        prog = compile_board(graph, board, part=part)
     if compile_budget_s is not None and \
-            partition_s + compile_s > compile_budget_s:
+            tm["partition"] + tm["compile"] > compile_budget_s:
         raise RuntimeError(
             f"{cls}@{board.chips_x}x{board.chips_y}: partition+compile "
-            f"took {partition_s + compile_s:.2f}s > budget "
+            f"took {tm['partition'] + tm['compile']:.2f}s > budget "
             f"{compile_budget_s:.2f}s")
 
     sim = ChipSim(prog)
     runner = jax.jit(lambda: sim.run(n_ticks))
-    tick_us = time_call(runner, warmup=1, iters=3) / n_ticks
+    with tm.phase("first_tick_jit"):
+        jax.block_until_ready(runner())
+    tick_us = time_call(runner, warmup=0, iters=3) / n_ticks
+    tm.record("steady_tick", tick_us * 1e-6)
     recs = jax.block_until_ready(sim.run(n_ticks))
     tab = chip_power_table(sim, recs)
 
-    flits = np.asarray(recs["link_flits"])
     name = (f"board_{cls}_{board.chips_x}x{board.chips_y}chips_"
             f"{prog.n_pes}pe")
     x = tab["noc"].get("xchip", {})
@@ -84,8 +82,8 @@ def bench_board(cls: str, board: BoardSpec, n_ticks: int = 64,
          f"{board.chip.height};pes={prog.n_pes};links={prog.noc.n_links};"
          f"xlinks={prog.noc.n_xchip_links};nnz={prog.sinc.nnz};"
          f"density={prog.sinc.density:.5f};cut_flits={part.cut_flits:.0f};"
-         f"build_s={build_s:.3f};partition_s={partition_s:.3f};"
-         f"compile_s={compile_s:.3f};"
+         f"build_s={tm['build']:.3f};partition_s={tm['partition']:.3f};"
+         f"compile_s={tm['compile']:.3f};jit_s={tm['first_tick_jit']:.3f};"
          f"xchip_flit_frac={x.get('flits_frac', 0.0):.4f};"
          f"xchip_energy_frac={x.get('energy_frac', 0.0):.4f};"
          f"peak_xlink_flits={x.get('peak_xlink_flits', 0.0):.0f};"
@@ -93,28 +91,33 @@ def bench_board(cls: str, board: BoardSpec, n_ticks: int = 64,
          f"noc_power_mw={tab['noc']['power_mw']:.4f};"
          f"worst_hops={prog.worst_tree_hops}")
 
+    out = {"name": name, "timers": tm.asdict(), "link_profile": None}
     if profile_links:
-        # the congestion-aware-routing seed: real per-link profiles,
-        # split at the tier boundary (ids >= n_onchip are chip-to-chip)
-        LINK_PROFILES[name] = {
-            "n_onchip_links": int(prog.noc.n_onchip_links),
-            "peak": np.round(flits.max(axis=0), 2).tolist(),
-            "mean": np.round(flits.mean(axis=0), 4).tolist(),
-        }
+        # the congestion-aware-routing seed: real per-link profiles off
+        # the whole-run link probes, split at the tier boundary (ids >=
+        # n_onchip_links are chip-to-chip)
+        out["link_profile"] = record_link_profile(sim, n_ticks)
+    return out
 
 
 def main(boards=("1x1", "2x2", "4x6", "4x12"), chip: str = "4x2",
          classes=("hybrid", "synfire", "dnn"), n_ticks: int = 64,
          compile_budget_s: float | None = None,
-         profile_links: bool = False) -> None:
+         profile_links: bool = False) -> dict:
+    link_profiles: dict = {}
+    phase_timers: dict = {}
     for cls in classes:
         for i, b in enumerate(boards):
             spec = BoardSpec.parse(b, chip=chip)
-            bench_board(cls, spec, n_ticks=n_ticks,
-                        compile_budget_s=compile_budget_s,
-                        # profiles only for each class's largest board
-                        profile_links=profile_links
-                        and i == len(boards) - 1)
+            row = bench_board(cls, spec, n_ticks=n_ticks,
+                              compile_budget_s=compile_budget_s,
+                              # profiles only for each class's largest board
+                              profile_links=profile_links
+                              and i == len(boards) - 1)
+            phase_timers[row["name"]] = row["timers"]
+            if row["link_profile"] is not None:
+                link_profiles[row["name"]] = row["link_profile"]
+    return {"link_profiles": link_profiles, "phase_timers": phase_timers}
 
 
 if __name__ == "__main__":
@@ -134,19 +137,15 @@ if __name__ == "__main__":
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
-    main(boards=tuple(args.boards.split(",")), chip=args.chip,
-         classes=tuple(args.classes.split(",")), n_ticks=args.ticks,
-         compile_budget_s=args.budget_s, profile_links=args.profile_links)
+    extras = main(boards=tuple(args.boards.split(",")), chip=args.chip,
+                  classes=tuple(args.classes.split(",")),
+                  n_ticks=args.ticks, compile_budget_s=args.budget_s,
+                  profile_links=args.profile_links)
 
     if args.json:
-        import json
-        import platform
-        from pathlib import Path
-        payload = {"rows": RESULTS, "link_profiles": LINK_PROFILES,
-                   "jax_version": jax.__version__,
-                   "python": platform.python_version(),
-                   "platform": platform.platform()}
-        path = Path(args.json)
-        path.parent.mkdir(parents=True, exist_ok=True)
-        path.write_text(json.dumps(payload, indent=1))
-        print(f"# wrote {len(RESULTS)} rows to {path}")
+        from benchmarks.common import RESULTS
+        from repro.obs import write_bench_json
+        write_bench_json(args.json, RESULTS,
+                         link_profiles=extras["link_profiles"],
+                         timers=extras["phase_timers"],
+                         config=vars(args))

@@ -16,7 +16,10 @@ The board-scale sweep (``--sweep 256,1024,4096``) takes the same three
 classes to 1000+ PE meshes through the SPARSE NoC path, reporting graph
 build, compile and per-tick engine time separately plus a sparse-vs-dense
 microbench of the per-tick link/flit accounting — the numbers behind
-BENCH_pr3.json (run with ``--json`` to regenerate it).
+BENCH_pr3.json.  ``--probe-overhead`` additionally times the engine with
+the default telemetry probe set compiled into the scan (the < 10%
+overhead budget of BENCH_pr6.json); ``--json`` writes a manifest-stamped
+artifact.
 """
 from __future__ import annotations
 
@@ -35,6 +38,7 @@ from repro.chip.workloads import (dnn_graph, hybrid_farm_graph,
                                   tiled_dnn_workload)
 from repro.configs import paper
 from repro.core.pe import PESpec, partition_layer_to_sram
+from repro.obs import PhaseTimers, default_probes, record_link_profile
 
 
 def main(sizes=(8, 16, 32, 64), ticks_per_pe: int = 12) -> None:
@@ -101,11 +105,6 @@ SCALED_SYNFIRE = dataclasses.replace(
 # template conv layer that splits into ~13 tiles under the 128 kB SRAM
 SCALE_DNN_LAYER = dict(h=64, w=64, cin=32, cout=64, kh=3, kw=3)
 
-# per-link profiles land here; --json writes them next to the rows
-# (parity with board_scale.py — the congestion-aware-routing roadmap item
-# consumes exactly these, single-chip meshes included)
-LINK_PROFILES: dict = {}
-
 
 def dnn_layers_for_pes(n_pes: int, pe: PESpec = PESpec()) -> list:
     """Repeat the template layer until the tiled stack fills ~n_pes PEs."""
@@ -129,51 +128,67 @@ def build_scaled_graph(cls: str, n_pes: int):
 def sweep(sizes=(256, 1024, 4096), n_ticks: int = 64,
           classes=("synfire", "dnn", "hybrid"),
           compile_budget_s: float | None = None,
-          noc_batch: int = 64, profile_links: bool = False) -> None:
+          noc_batch: int = 64, profile_links: bool = False,
+          probe_overhead: bool = False) -> dict:
     """Compile + run each workload class at each mesh size.
 
     Reported separately per (class, size):
       build_s    — graph construction (weights, drive tables; not ours)
       compile_s  — place + route + CSR incidence (the vectorized compiler)
+      jit_s      — first runner call (scan trace + XLA compile, cold)
       tick_us    — engine wall time per tick, auto-selected NoC path
       noc_sparse_us / noc_dense_us — per-tick link+flit accounting alone
                    (jit'd, warmed, batched over ``noc_batch`` ticks), the
                    sparse gather+segment-sum vs the dense einsum
+      probe_us / probe_overhead — (with ``probe_overhead=True``) per-tick
+                   wall time with the default telemetry probe set in the
+                   scan carry, and its relative cost vs the bare engine
 
     ``profile_links`` records per-link peak/mean flit profiles for each
-    class's largest mesh (parity with ``board_scale.py``), feeding the
-    congestion-aware-routing roadmap item from single-chip runs too.
+    class's largest mesh through the whole-run link probes (parity with
+    ``board_scale.py``), feeding the congestion-aware-routing roadmap
+    item from single-chip runs too.  Returns ``{"link_profiles": ...,
+    "phase_timers": ...}`` for the JSON artifact.
     """
     rng = np.random.default_rng(0)
+    link_profiles: dict = {}
+    phase_timers: dict = {}
     for cls in classes:
         for n_pes in sizes:
-            t0 = time.perf_counter()
-            graph = build_scaled_graph(cls, n_pes)
-            build_s = time.perf_counter() - t0
-
-            t0 = time.perf_counter()
-            prog = compile_graph(graph)
-            compile_s = time.perf_counter() - t0
-            if compile_budget_s is not None and compile_s > compile_budget_s:
+            tm = PhaseTimers()
+            with tm.phase("build"):
+                graph = build_scaled_graph(cls, n_pes)
+            with tm.phase("compile"):
+                prog = compile_graph(graph)
+            if compile_budget_s is not None and \
+                    tm["compile"] > compile_budget_s:
                 raise RuntimeError(
-                    f"{cls}@{n_pes}: compile took {compile_s:.2f}s "
+                    f"{cls}@{n_pes}: compile took {tm['compile']:.2f}s "
                     f"> budget {compile_budget_s:.2f}s")
 
-            # engine per-tick, auto-selected NoC path, compiled-once scan
+            # engine per-tick, auto-selected NoC path, compiled-once scan:
+            # the first call pays the scan trace + XLA compile, the
+            # steady-state median is the per-tick number
             sim = ChipSim(prog)
             runner = jax.jit(lambda: sim.run(n_ticks))
-            tick_us = time_call(runner, warmup=1, iters=3) / n_ticks
+            with tm.phase("first_tick_jit"):
+                jax.block_until_ready(runner())
+            tick_us = time_call(runner, warmup=0, iters=3) / n_ticks
+            tm.record("steady_tick", tick_us * 1e-6)
+
+            probe_str = ""
+            if probe_overhead:
+                probes = default_probes(prog)
+                prunner = jax.jit(lambda: sim.run(n_ticks, probes=probes))
+                probe_us = time_call(prunner, warmup=1, iters=3) / n_ticks
+                probe_str = (f";probe_us={probe_us:.1f};"
+                             f"probe_overhead={probe_us / tick_us - 1:.4f}")
 
             if profile_links and n_pes == max(sizes):
-                # reuse the already-compiled runner — a fresh sim.run()
-                # would re-trace the whole scan at the largest mesh
-                flits = np.asarray(
-                    jax.block_until_ready(runner())["link_flits"])
-                LINK_PROFILES[f"scale_{cls}_{prog.n_pes}pe"] = {
-                    "n_onchip_links": int(prog.noc.n_links),
-                    "peak": np.round(flits.max(axis=0), 2).tolist(),
-                    "mean": np.round(flits.mean(axis=0), 4).tolist(),
-                }
+                # whole-run per-link peak/mean through the probe layer —
+                # O(n_links) memory regardless of n_ticks
+                link_profiles[f"scale_{cls}_{prog.n_pes}pe"] = \
+                    record_link_profile(sim, n_ticks)
 
             # NoC accounting alone, per tick inside a scan (how the engine
             # pays it): sparse column plan vs dense einsum
@@ -204,14 +219,18 @@ def sweep(sizes=(256, 1024, 4096), n_ticks: int = 64,
             de_us = min(time_call(f_de, iters=5) for _ in range(3)) \
                 / noc_batch
 
-            emit(f"scale_{cls}_{P}pe", tick_us,
+            name = f"scale_{cls}_{P}pe"
+            phase_timers[name] = tm.asdict()
+            emit(name, tick_us,
                  f"mesh={prog.mesh.width}x{prog.mesh.height};"
                  f"links={noc.n_links};nnz={prog.sinc.nnz};"
                  f"density={prog.sinc.density:.4f};"
-                 f"build_s={build_s:.3f};compile_s={compile_s:.3f};"
+                 f"build_s={tm['build']:.3f};compile_s={tm['compile']:.3f};"
+                 f"jit_s={tm['first_tick_jit']:.3f};"
                  f"noc_sparse_us={sp_us:.2f};noc_dense_us={de_us:.2f};"
                  f"noc_speedup={de_us / sp_us:.2f};"
-                 f"worst_hops={prog.worst_tree_hops}")
+                 f"worst_hops={prog.worst_tree_hops}{probe_str}")
+    return {"link_profiles": link_profiles, "phase_timers": phase_timers}
 
 
 if __name__ == "__main__":
@@ -227,30 +246,30 @@ if __name__ == "__main__":
     ap.add_argument("--profile-links", action="store_true",
                     help="record per-link peak/mean load profiles for "
                     "each class's largest mesh (parity with board_scale)")
+    ap.add_argument("--probe-overhead", action="store_true",
+                    help="also time the engine with the default telemetry "
+                    "probe set (the BENCH_pr6 < 10%% overhead budget)")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write rows as machine-readable JSON")
+                    help="write rows as machine-readable JSON "
+                    "(manifest-stamped)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
+    extras: dict = {}
     if args.sweep:
-        sweep(sizes=tuple(int(s) for s in args.sweep.split(",")),
-              n_ticks=args.ticks,
-              classes=tuple(args.classes.split(",")),
-              compile_budget_s=args.budget_s,
-              profile_links=args.profile_links)
+        extras = sweep(sizes=tuple(int(s) for s in args.sweep.split(",")),
+                       n_ticks=args.ticks,
+                       classes=tuple(args.classes.split(",")),
+                       compile_budget_s=args.budget_s,
+                       profile_links=args.profile_links,
+                       probe_overhead=args.probe_overhead)
     else:
         main()
 
     if args.json:
-        import json
-        import platform
-        from pathlib import Path
         from benchmarks.common import RESULTS
-        payload = {"rows": RESULTS, "link_profiles": LINK_PROFILES,
-                   "jax_version": jax.__version__,
-                   "python": platform.python_version(),
-                   "platform": platform.platform()}
-        path = Path(args.json)
-        path.parent.mkdir(parents=True, exist_ok=True)
-        path.write_text(json.dumps(payload, indent=1))
-        print(f"# wrote {len(RESULTS)} rows to {path}")
+        from repro.obs import write_bench_json
+        write_bench_json(args.json, RESULTS,
+                         link_profiles=extras.get("link_profiles", {}),
+                         timers=extras.get("phase_timers"),
+                         config=vars(args))

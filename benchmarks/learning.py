@@ -136,13 +136,5 @@ if __name__ == "__main__":
          budget_s=args.budget_s)
 
     if args.json:
-        import json
-        import platform
-        from pathlib import Path
-        payload = {"rows": RESULTS, "jax_version": jax.__version__,
-                   "python": platform.python_version(),
-                   "platform": platform.platform()}
-        path = Path(args.json)
-        path.parent.mkdir(parents=True, exist_ok=True)
-        path.write_text(json.dumps(payload, indent=1))
-        print(f"# wrote {len(RESULTS)} rows to {path}")
+        from repro.obs import write_bench_json
+        write_bench_json(args.json, RESULTS, config=vars(args))

@@ -7,11 +7,8 @@ benches.  Prints ``name,us_per_call,derived`` CSV rows.
 from __future__ import annotations
 
 import argparse
-import json
-import platform
 import sys
 import traceback
-from pathlib import Path
 
 SECTIONS = [
     ("mac", "benchmarks.mac_efficiency", "Fig. 14/15 CoreMark + MAC TOPS/W"),
@@ -50,18 +47,12 @@ def main() -> None:
 
     if args.json:
         from benchmarks.common import RESULTS
-        import jax
-        payload = {
-            "rows": RESULTS,
-            "failed_sections": failed,
-            "jax_version": jax.__version__,
-            "python": platform.python_version(),
-            "platform": platform.platform(),
-        }
-        path = Path(args.json)
-        path.parent.mkdir(parents=True, exist_ok=True)
-        path.write_text(json.dumps(payload, indent=1))
-        print(f"# wrote {len(RESULTS)} rows to {path}")
+        from repro.obs import write_bench_json
+        # the same manifest-stamped payload the scale benchmarks emit, so
+        # every BENCH artifact is self-describing (git sha, versions,
+        # host, timestamp)
+        write_bench_json(args.json, RESULTS, failed_sections=failed,
+                         config={"only": args.only})
 
     if failed:
         print(f"# sections failed: {failed}")

@@ -160,6 +160,13 @@ class BoardNoc(NocAccounting):
         nbr = self.board.chip_index(cx + dx, cy + dy)
         return (c, self.board.port(d)), (nbr, self.board.port(OPPOSITE[d]))
 
+    def tier_masks(self) -> dict:
+        """Two-tier twin of ``NocAccounting.tier_masks``: the cheap
+        on-chip tier and the SerDes chip-to-chip tier, as 0/1 masks over
+        the board-global link-id space (``repro.obs`` splits per-link
+        records into per-tier tracks with these)."""
+        return {"onchip": 1.0 - self.xlink_mask, "xchip": self.xlink_mask}
+
     # -- tiered pricing ---------------------------------------------------
 
     def traffic_energy_j(self, packets, tree_links, payload_bits):

@@ -93,7 +93,8 @@ class ChipSim:
         return mode == "sparse"
 
     def run(self, n_ticks: int, seed: int = 1, noc_mode: str | None = None,
-            link_load_impl: str | None = None) -> dict:
+            link_load_impl: str | None = None, probes=(),
+            keep_records: bool = True) -> dict:
         """Per-tick records: everything the program's semantics reports
         (spike rasters / layer occupancy / decoded signals, PLs, Eq. (1)
         energies), plus the engine's NoC accounting:
@@ -124,6 +125,16 @@ class ChipSim:
         the neuron dynamics are the SAME tick function the single-chip
         path scans (``make_synfire_tick``), so an 8-PE ChipSim reproduces
         ``simulate_synfire`` rasters bit for bit.
+
+        ``probes`` (``repro.obs.probes``: ProbeSpec instances or registry
+        names) compiles strided/windowed telemetry accumulators into the
+        scan carry, returned under ``recs["probes"]``.  The probe step
+        runs AFTER the tick — it reads records, never state — so probed
+        runs produce bit-identical per-tick records, and with the default
+        ``probes=()`` the traced tick body (and carry) is EXACTLY the
+        bare engine's.  ``keep_records=False`` (probed runs only) drops
+        the full (T, ...) per-tick records and returns just the probe
+        output — the memory-bounded mode for long board-scale runs.
         """
         prog = self.program
         tick = prog.make_tick(dvfs=self.dvfs, em=self.em,
@@ -173,9 +184,9 @@ class ChipSim:
         def chip_tick(state, t):
             state, rec = tick(state, t)
             if learn is not None:
-                lstate, e_learn = learn(state["learn"], rec)
+                lstate, lrec = learn(state["learn"], rec)
                 state = {**state, "learn": lstate}
-                rec["e_learn"] = e_learn
+                rec.update(lrec)
             packets = rec["packets"].astype(jnp.float32)    # (P,)
             pb = rec.get("payload_bits", static_pb)
             if sparse:
@@ -192,7 +203,35 @@ class ChipSim:
                                                         tree_links_x, pb)
             return state, rec
 
-        _, recs = jax.lax.scan(chip_tick, init, jnp.arange(n_ticks))
+        if not probes:
+            if not keep_records:
+                raise ValueError("keep_records=False without probes would "
+                                 "record nothing; pass probes=...")
+            _, recs = jax.lax.scan(chip_tick, init, jnp.arange(n_ticks))
+            return recs
+
+        # telemetry: compile the probe accumulators into the scan carry
+        # NEXT TO the workload state.  The probe step consumes the tick's
+        # records and never feeds back into state, so probed runs stay
+        # bit-identical to bare runs — only the carry grows.  (import
+        # here: repro.obs reaches back into repro.chip for helpers)
+        from repro.obs.probes import make_probe_step, resolve_probes
+        specs = resolve_probes(prog, probes)
+        rec_shapes = jax.eval_shape(
+            chip_tick, init, jax.ShapeDtypeStruct((), jnp.int32))[1]
+        obs0, probe_step, finalize = make_probe_step(specs, rec_shapes,
+                                                     n_ticks)
+
+        def probed_tick(carry, t):
+            state, obs = carry
+            state, rec = chip_tick(state, t)
+            obs = probe_step(obs, rec, t)
+            return (state, obs), (rec if keep_records else {})
+
+        (_, obs), recs = jax.lax.scan(probed_tick, (init, obs0),
+                                      jnp.arange(n_ticks))
+        recs = dict(recs) if keep_records else {}
+        recs["probes"] = finalize(obs)
         return recs
 
 

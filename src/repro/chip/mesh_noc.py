@@ -341,6 +341,13 @@ class NocAccounting:
         bottleneck metric."""
         return loads.max(axis=-1)
 
+    def tier_masks(self) -> dict:
+        """Named 0/1 masks over the link-id space, one per link tier —
+        what the telemetry layer (``repro.obs``) uses to split per-link
+        records into per-tier tracks.  A single-chip NoC has one tier;
+        the board NoC adds the chip-to-chip SerDes tier."""
+        return {"onchip": np.ones(self.n_links, np.float32)}
+
     def link_capacity_packets(self, t_window_s: float,
                               packet_bits: int = SPIKE_PACKET_BITS) -> float:
         """Packets one link can carry in ``t_window_s`` at the NoC clock."""
@@ -390,6 +397,13 @@ class MeshNoc(NocAccounting):
 
     @property
     def n_links(self) -> int:
+        return len(self.links)
+
+    @property
+    def n_onchip_links(self) -> int:
+        """Every link of a single-chip mesh is on-chip — the shared
+        tier-boundary accessor the benchmark link profiles use (the
+        board NoC's first ``n_onchip_links`` ids are its on-chip tier)."""
         return len(self.links)
 
     # -- incidence construction (setup time, numpy) -----------------------

@@ -70,14 +70,18 @@ def _slot_signal(rec: dict, key: str, slot_name: str):
 def make_learn_step(program):
     """Per-tick learning update for ``program`` (traced in the scan).
 
-    Returns ``step(learn_state, rec) -> (learn_state, e_learn)`` with
-    ``e_learn`` the (P,) per-PE learning energy of this tick."""
+    Returns ``step(learn_state, rec) -> (learn_state, rec_updates)``;
+    ``rec_updates`` carries ``e_learn`` — the (P,) per-PE learning
+    energy of this tick — plus one ``learn/<slot>/dw`` scalar per slot
+    (mean |weight delta|, in weight units), the live update-magnitude
+    signal the telemetry probes and the Perfetto learn track consume."""
     slots = program.learn_slots
     P = program.n_pes
 
     def step(lstate, rec):
         new = dict(lstate)
         e = jnp.zeros(P, jnp.float32)
+        updates = {}
         for s in slots:
             st = lstate[s.name]
             pre = _slot_signal(rec, f"learn/{s.name}/pre", s.name)
@@ -92,6 +96,7 @@ def make_learn_step(program):
                 active = jnp.any(err != 0).astype(jnp.float32)
                 macs = active * float(s.n_pre * s.n_post)
                 n_exp = float(s.n_pre)
+                dw = jnp.abs(w - st["w"]).mean()
             else:
                 post = _slot_signal(rec, f"learn/{s.name}/post", s.name)
                 w, ptr, qtr = stdp_step_fx(st["w"], st["pre_tr"],
@@ -100,8 +105,12 @@ def make_learn_step(program):
                 macs = (pre.astype(jnp.float32).sum() * s.n_post
                         + post.astype(jnp.float32).sum() * s.n_pre)
                 n_exp = float(s.n_pre + s.n_post)
+                dw = (jnp.abs(w - st["w"]).astype(jnp.float32).mean()
+                      / FX_ONE)
+            updates[f"learn/{s.name}/dw"] = dw
             e_slot = mac_dynamic_energy_j(macs) + exp_op_energy_j(n_exp)
             e = e.at[jnp.asarray(s.pe_ids)].add(e_slot / len(s.pe_ids))
-        return new, e
+        updates["e_learn"] = e
+        return new, updates
 
     return step

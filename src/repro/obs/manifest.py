@@ -1,0 +1,144 @@
+"""Run provenance for BENCH artifacts + host-side phase timers.
+
+Every benchmark JSON the repo emits carries a ``manifest`` block —
+git sha, config hash, seed, jax/jaxlib versions, host — so a BENCH file
+found in CI artifacts months later is self-describing, and
+``repro.obs.report`` can say WHAT two runs being diffed actually were.
+
+``PhaseTimers`` is the shared host-side stopwatch for the compile
+pipeline's phases (build / partition / compile / first-tick-jit /
+steady-tick): benchmarks wrap each phase in ``with tm.phase("build")``
+and the per-phase seconds ride the JSON next to the rows.
+"""
+from __future__ import annotations
+
+import contextlib
+import hashlib
+import json
+import platform
+import socket
+import subprocess
+import time
+from datetime import datetime, timezone
+from pathlib import Path
+from typing import Optional
+
+
+def _git(args: list, cwd: Optional[str] = None) -> Optional[str]:
+    try:
+        out = subprocess.run(["git", *args], cwd=cwd, capture_output=True,
+                             text=True, timeout=5)
+        return out.stdout.strip() if out.returncode == 0 else None
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+
+
+def config_hash(obj) -> str:
+    """Stable short hash of any JSON-serializable config (dataclasses
+    and numpy scalars/arrays coerced via ``str``)."""
+    blob = json.dumps(obj, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def run_manifest(seed: Optional[int] = None, config=None,
+                 extra: Optional[dict] = None) -> dict:
+    """The provenance block attached to every BENCH json."""
+    import jax
+    try:
+        import jaxlib
+        jaxlib_version = jaxlib.__version__
+    except Exception:                                     # pragma: no cover
+        jaxlib_version = None
+    root = str(Path(__file__).resolve().parents[3])
+    sha = _git(["rev-parse", "HEAD"], cwd=root)
+    dirty = _git(["status", "--porcelain"], cwd=root)
+    man = {
+        "git_sha": sha,
+        "git_dirty": bool(dirty) if dirty is not None else None,
+        "seed": seed,
+        "config_hash": config_hash(config) if config is not None else None,
+        "jax_version": jax.__version__,
+        "jaxlib_version": jaxlib_version,
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "host": socket.gethostname(),
+        "timestamp_utc": datetime.now(timezone.utc).isoformat(
+            timespec="seconds"),
+    }
+    if extra:
+        man.update(extra)
+    return man
+
+
+class PhaseTimers:
+    """Named host-side stopwatches for the compile/run pipeline.
+
+    >>> tm = PhaseTimers()
+    >>> with tm.phase("build"): graph = build()        # doctest: +SKIP
+    >>> tm["build"]                                    # doctest: +SKIP
+    0.123
+
+    ``record`` stores an externally-measured duration (e.g. the steady
+    per-tick time from ``time_call``); ``asdict`` rounds for JSON.
+    """
+
+    def __init__(self):
+        self.seconds: dict = {}
+
+    @contextlib.contextmanager
+    def phase(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield self
+        finally:
+            self.seconds[name] = (self.seconds.get(name, 0.0)
+                                  + time.perf_counter() - t0)
+
+    def record(self, name: str, seconds: float) -> None:
+        self.seconds[name] = float(seconds)
+
+    def __getitem__(self, name: str) -> float:
+        return self.seconds[name]
+
+    def get(self, name: str, default: float = 0.0) -> float:
+        return self.seconds.get(name, default)
+
+    def asdict(self, ndigits: int = 6) -> dict:
+        return {k: round(v, ndigits) for k, v in self.seconds.items()}
+
+
+def bench_payload(rows: list, *, link_profiles: Optional[dict] = None,
+                  timers: Optional[dict] = None, seed: Optional[int] = None,
+                  config=None, **extra) -> dict:
+    """The standard BENCH json payload: rows + manifest (+ optional
+    per-link profiles / phase timers / extra sections).
+
+    Top-level ``jax_version``/``python``/``platform`` keys are kept for
+    backward compatibility with pre-manifest BENCH consumers."""
+    man = run_manifest(seed=seed, config=config)
+    payload = {
+        "rows": rows,
+        "manifest": man,
+        # legacy flat keys (BENCH_pr3/4/5.json readers)
+        "jax_version": man["jax_version"],
+        "python": man["python"],
+        "platform": man["platform"],
+    }
+    if link_profiles is not None:
+        payload["link_profiles"] = link_profiles
+    if timers is not None:
+        payload["phase_timers"] = (timers.asdict()
+                                   if isinstance(timers, PhaseTimers)
+                                   else timers)
+    payload.update(extra)
+    return payload
+
+
+def write_bench_json(path, rows: list, **kw) -> Path:
+    """Write ``bench_payload`` to ``path`` (parents created) and return
+    the path — the one JSON writer all benchmarks share."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(bench_payload(rows, **kw), indent=1))
+    print(f"# wrote {len(rows)} rows to {path}")
+    return path

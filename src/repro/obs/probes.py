@@ -1,0 +1,283 @@
+"""Declarative in-scan probes over the engine's per-tick records.
+
+A ``ProbeSpec`` names a per-tick record signal (any key the program's
+semantics or the engine itself reports — ``link_flits``, ``packets``,
+``pl``, ``e_learn``, ``learn/<slot>/err``, ...) and how to record it:
+
+* ``stride``  — emit one sample every ``stride`` ticks (``None`` = one
+  sample for the whole run), so a 10k-tick board run can keep e.g. 100
+  strided samples of a (n_links,) signal instead of the full (T, n_links)
+  timeline;
+* ``op``      — the windowed reduction folded tick-by-tick inside the
+  scan carry: ``peak`` / ``mean`` / ``sum`` over each tumbling window,
+  ``last`` (instantaneous sample at window ends), or ``ema`` (a
+  continuous exponential moving average, sampled at window ends — the
+  hardware-counter idiom for DVFS-style feedback).
+
+``ChipSim.run(probes=...)`` compiles the accumulators into the scan
+carry, next to the workload state: no host round-trip per tick, no
+(T, ...) allocation, and with ``probes=()`` (the default) the traced
+tick body is EXACTLY the bare engine's — golden tests pin that bitwise.
+
+The probe buffers come back under ``recs["probes"][name]`` with shape
+``(n_samples, *signal_shape)``; ``keep_records=False`` drops the full
+per-tick records entirely and returns only the probe output (the
+memory-bounded mode for long board runs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PROBE_OPS = ("peak", "mean", "sum", "ema", "last")
+
+
+@dataclass(frozen=True)
+class ProbeSpec:
+    """One recorded signal: ``key`` into the per-tick rec, windowed
+    ``op``, sampling ``stride`` in ticks (None = whole run), EMA decay
+    ``alpha`` (only for ``op="ema"``)."""
+    name: str
+    key: str
+    op: str = "last"
+    stride: Optional[int] = None
+    alpha: float = 0.1
+
+    def __post_init__(self):
+        if self.op not in PROBE_OPS:
+            raise ValueError(f"probe {self.name!r}: unknown op {self.op!r};"
+                             f" expected one of {PROBE_OPS}")
+        if self.stride is not None and self.stride < 1:
+            raise ValueError(f"probe {self.name!r}: stride must be >= 1, "
+                             f"got {self.stride}")
+        if not 0.0 < self.alpha <= 1.0:
+            raise ValueError(f"probe {self.name!r}: ema alpha must be in "
+                             f"(0, 1], got {self.alpha}")
+
+
+# ---------------------------------------------------------------------------
+# Registry: named probe sets over the signals every program guarantees
+# ---------------------------------------------------------------------------
+
+def _link_flit_probes(program, stride=None):
+    """Per-link DNoC flit loads — the SpiNNCer-style congestion signal."""
+    return (ProbeSpec("link_flits_peak", "link_flits", "peak", stride),
+            ProbeSpec("link_flits_mean", "link_flits", "mean", stride))
+
+
+def _pe_activity_probes(program, stride=None):
+    """Per-PE NoC source activity (multicast packets emitted)."""
+    return (ProbeSpec("pe_packets_sum", "packets", "sum", stride),)
+
+
+def _dvfs_probes(program, stride=None):
+    """Per-PE performance level — the DVFS trajectory (mean occupancy of
+    the levels plus a continuously-averaged hardware-counter view)."""
+    return (ProbeSpec("pe_pl_mean", "pl", "mean", stride),
+            ProbeSpec("pe_pl_ema", "pl", "ema", stride, alpha=0.05))
+
+
+def _energy_probes(program, stride=None):
+    """Per-PE Eq. (1) energy under DVFS plus the NoC traffic energy."""
+    return (ProbeSpec("pe_e_dvfs_baseline_sum", "e_dvfs_baseline", "sum",
+                      stride),
+            ProbeSpec("pe_e_dvfs_synapse_sum", "e_dvfs_synapse", "sum",
+                      stride),
+            ProbeSpec("e_noc_sum", "e_noc", "sum", stride))
+
+
+def _learn_probes(program, stride=None):
+    """Per-slot learn signals: per-PE learning energy + per-slot mean
+    |dw| (the engine reports both for every plastic program)."""
+    if not getattr(program, "learn_slots", ()):
+        return ()
+    out = [ProbeSpec("pe_e_learn_sum", "e_learn", "sum", stride)]
+    out += [ProbeSpec(f"learn_dw_{s.name}", f"learn/{s.name}/dw", "mean",
+                      stride) for s in program.learn_slots]
+    return tuple(out)
+
+
+PROBE_REGISTRY = {
+    "link_flits": _link_flit_probes,
+    "pe_packets": _pe_activity_probes,
+    "dvfs": _dvfs_probes,
+    "energy": _energy_probes,
+    "learn": _learn_probes,
+}
+
+
+def default_probes(program, stride: Optional[int] = None) -> tuple:
+    """The standard low-overhead probe set: congestion, activity, DVFS,
+    energy — plus the learn tier when the program is plastic.  This is
+    the set the < 10% tick overhead budget is measured against."""
+    specs: list = []
+    for build in PROBE_REGISTRY.values():
+        specs.extend(build(program, stride))
+    return tuple(specs)
+
+
+def resolve_probes(program, probes) -> tuple:
+    """Normalize ``probes`` to a tuple of ``ProbeSpec``: accepts specs,
+    registry names ("link_flits", "dvfs", ...) and iterables of either.
+    Duplicate probe names are rejected (they would shadow one another in
+    the output dict)."""
+    specs: list = []
+    for p in probes:
+        if isinstance(p, ProbeSpec):
+            specs.append(p)
+        elif isinstance(p, str):
+            try:
+                specs.extend(PROBE_REGISTRY[p](program))
+            except KeyError:
+                raise ValueError(
+                    f"unknown probe set {p!r}; registry has "
+                    f"{sorted(PROBE_REGISTRY)}") from None
+        else:
+            raise TypeError(f"probe {p!r} is neither a ProbeSpec nor a "
+                            "registry name")
+    names = [s.name for s in specs]
+    dup = {n for n in names if names.count(n) > 1}
+    if dup:
+        raise ValueError(f"duplicate probe names: {sorted(dup)}")
+    return tuple(specs)
+
+
+# ---------------------------------------------------------------------------
+# Compilation into the scan carry
+# ---------------------------------------------------------------------------
+
+def n_probe_samples(n_ticks: int, stride: Optional[int]) -> int:
+    """Samples a probe emits over ``n_ticks``: one per tumbling window,
+    the final partial window included."""
+    s = n_ticks if stride is None else min(stride, n_ticks)
+    return -(-n_ticks // s) if n_ticks else 0
+
+
+def make_probe_step(probes: tuple, rec_shapes: dict, n_ticks: int):
+    """Compile ``probes`` against the per-tick record layout.
+
+    ``rec_shapes`` maps rec keys to abstract shapes (``jax.eval_shape``
+    of the engine's tick).  Returns ``(init, step, finalize)``:
+
+    * ``init`` — the probe subtree added to the scan carry (per probe: a
+      window accumulator, a tick-in-window count and the (n_samples, ...)
+      output buffer);
+    * ``step(obs, rec, t) -> obs`` — traced inside the scan: folds this
+      tick's signal into the accumulator and, at window ends, writes the
+      reduced sample into the buffer and resets the window;
+    * ``finalize(obs) -> {name: (n_samples, ...)}`` — the recorded
+      timelines off the final carry.
+
+    Windows are tumbling: sample s covers ticks [s*stride, (s+1)*stride)
+    (the last window may be shorter; ``mean`` divides by the true tick
+    count).  ``ema`` never resets — it is one continuous average over
+    the whole run, sampled at window ends.
+    """
+    for p in probes:
+        if p.key not in rec_shapes:
+            raise KeyError(
+                f"probe {p.name!r} reads rec key {p.key!r} which this "
+                f"program's tick does not report; available keys: "
+                f"{sorted(rec_shapes)}")
+
+    compiled = []
+    init = {}
+    for p in probes:
+        shape = tuple(rec_shapes[p.key].shape)
+        stride = n_ticks if p.stride is None else min(p.stride, n_ticks)
+        n_samples = n_probe_samples(n_ticks, p.stride)
+        init[p.name] = {
+            "acc": jnp.zeros(shape, jnp.float32),
+            "cnt": jnp.zeros((), jnp.float32),
+            "buf": jnp.zeros((max(n_samples, 1),) + shape, jnp.float32),
+        }
+        compiled.append((p, stride, n_samples))
+
+    def step(obs, rec, t):
+        new = dict(obs)
+        for p, stride, n_samples in compiled:
+            st = obs[p.name]
+            v = rec[p.key].astype(jnp.float32)
+            cnt = st["cnt"] + 1.0
+            first = st["cnt"] == 0.0          # first tick of this window
+            if p.op == "peak":
+                acc = jnp.where(first, v, jnp.maximum(st["acc"], v))
+            elif p.op in ("mean", "sum"):
+                acc = jnp.where(first, v, st["acc"] + v)
+            elif p.op == "ema":
+                # continuous over the whole run: seed with the first
+                # tick's value, never reset at window ends
+                acc = jnp.where(st["acc_seen"] == 0.0, v,
+                                p.alpha * v + (1.0 - p.alpha) * st["acc"])
+            else:                             # last
+                acc = v
+            emit = acc / cnt if p.op == "mean" else acc
+            # window end: the stride boundary or the run's final tick
+            # (partial tail window)
+            is_emit = ((t + 1) % stride == 0) | (t == n_ticks - 1)
+            slot = jnp.minimum(t // stride, n_samples - 1)
+            cur = jax.lax.dynamic_index_in_dim(st["buf"], slot,
+                                               keepdims=False)
+            buf = jax.lax.dynamic_update_index_in_dim(
+                st["buf"], jnp.where(is_emit, emit, cur), slot, 0)
+            keep = p.op == "ema"
+            nxt = {
+                "acc": acc if keep else jnp.where(is_emit,
+                                                  jnp.zeros_like(acc), acc),
+                "cnt": jnp.where(is_emit, 0.0, cnt),
+                "buf": buf,
+            }
+            if keep:
+                nxt["acc_seen"] = jnp.ones((), jnp.float32)
+                nxt["cnt"] = cnt  # unused for ema, kept for pytree shape
+            new[p.name] = nxt
+        return new
+
+    # ema carries an extra "seen" flag (its accumulator survives window
+    # resets, so "cnt == 0" cannot mark the run's first tick)
+    for p, _, _ in compiled:
+        if p.op == "ema":
+            init[p.name]["acc_seen"] = jnp.zeros((), jnp.float32)
+
+    def finalize(obs) -> dict:
+        return {p.name: obs[p.name]["buf"] for p, _, _ in compiled}
+
+    return init, step, finalize
+
+
+# ---------------------------------------------------------------------------
+# The link-profile probe set (shared by both scale benchmarks)
+# ---------------------------------------------------------------------------
+
+def link_profile_probes() -> tuple:
+    """Whole-run per-link peak/mean flit loads — the exact signals the
+    congestion-aware-routing roadmap item consumes."""
+    return (ProbeSpec("link_flits_peak", "link_flits", "peak", stride=None),
+            ProbeSpec("link_flits_mean", "link_flits", "mean", stride=None))
+
+
+def link_profile(program, probe_out: dict) -> dict:
+    """Format whole-run link probes as the benchmark profile schema
+    (identical to the pre-probe ``--profile-links`` JSON): per-link peak
+    and mean flits plus the on-chip/chip-to-chip tier boundary."""
+    noc = program.noc
+    peak = np.asarray(probe_out["link_flits_peak"])[-1]
+    mean = np.asarray(probe_out["link_flits_mean"])[-1]
+    return {
+        "n_onchip_links": int(getattr(noc, "n_onchip_links", noc.n_links)),
+        "peak": np.round(peak, 2).tolist(),
+        "mean": np.round(mean, 4).tolist(),
+    }
+
+
+def record_link_profile(sim, n_ticks: int, **run_kw) -> dict:
+    """Run ``sim`` with only the link-profile probes (full per-tick
+    records dropped — O(n_links) memory however long the run) and return
+    the benchmark profile dict."""
+    recs = sim.run(n_ticks, probes=link_profile_probes(),
+                   keep_records=False, **run_kw)
+    return link_profile(sim.program, recs["probes"])

@@ -1,0 +1,118 @@
+"""BENCH regression gate: diff two benchmark JSON artifacts.
+
+    python -m repro.obs.report BASELINE.json FRESH.json \
+        [--threshold 0.2] [--metric us_per_call] [--warn-only]
+
+Rows are matched by name; for each shared row the chosen metric is
+compared as a ratio fresh/baseline, and any ratio above
+``1 + threshold`` is a regression.  Exit status: 0 clean, 1 regressions
+found (suppressed by ``--warn-only``), 2 malformed input / no
+comparable rows — so CI can gate on it directly.
+
+The metric defaults to ``us_per_call`` (the per-row wall time every
+``benchmarks.common.emit`` records — tick_us for the scale sweeps); any
+numeric key of a row's parsed ``values`` dict (``compile_s``,
+``partition_s``, ...) works too.  Both files' provenance manifests are
+echoed so the report says what was actually compared.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Optional
+
+
+def _metric(row: dict, metric: str) -> Optional[float]:
+    v = row.get(metric, row.get("values", {}).get(metric))
+    return float(v) if isinstance(v, (int, float)) else None
+
+
+def diff_benches(base: dict, new: dict, metric: str = "us_per_call",
+                 threshold: float = 0.2) -> dict:
+    """Compare two ``bench_payload`` dicts row by row.
+
+    Returns {"rows": [...], "regressions": [...], "missing": [...]} where
+    each row entry is (name, base_value, new_value, ratio) and
+    regressions are the subset with ratio > 1 + threshold.
+    """
+    base_rows = {r["name"]: r for r in base.get("rows", [])}
+    new_rows = {r["name"]: r for r in new.get("rows", [])}
+    rows, regressions = [], []
+    for name in base_rows:
+        if name not in new_rows:
+            continue
+        b = _metric(base_rows[name], metric)
+        n = _metric(new_rows[name], metric)
+        if b is None or n is None or b <= 0:
+            continue
+        ratio = n / b
+        entry = {"name": name, "base": b, "new": n, "ratio": ratio}
+        rows.append(entry)
+        if ratio > 1.0 + threshold:
+            regressions.append(entry)
+    missing = sorted(set(base_rows) - set(new_rows))
+    return {"rows": rows, "regressions": regressions, "missing": missing}
+
+
+def _describe(label: str, path: Path, payload: dict) -> None:
+    man = payload.get("manifest", {})
+    sha = (man.get("git_sha") or "?")[:12]
+    when = man.get("timestamp_utc", "?")
+    host = man.get("host", "?")
+    jaxv = man.get("jax_version", payload.get("jax_version", "?"))
+    print(f"# {label}: {path}  sha={sha}  jax={jaxv}  host={host}  {when}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("baseline", type=Path)
+    ap.add_argument("fresh", type=Path)
+    ap.add_argument("--metric", default="us_per_call")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="relative regression threshold (0.2 = +20%%)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but exit 0 (CI advisory mode)")
+    args = ap.parse_args(argv)
+
+    payloads = []
+    for path in (args.baseline, args.fresh):
+        try:
+            payloads.append(json.loads(path.read_text()))
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"# cannot read {path}: {e}", file=sys.stderr)
+            return 2
+    base, new = payloads
+    _describe("baseline", args.baseline, base)
+    _describe("fresh   ", args.fresh, new)
+
+    d = diff_benches(base, new, metric=args.metric,
+                     threshold=args.threshold)
+    if not d["rows"]:
+        print(f"# no comparable rows for metric {args.metric!r}",
+              file=sys.stderr)
+        return 2
+
+    print(f"name,{args.metric}_base,{args.metric}_new,ratio")
+    for r in sorted(d["rows"], key=lambda r: -r["ratio"]):
+        flag = "  <-- REGRESSION" if r in d["regressions"] else ""
+        print(f"{r['name']},{r['base']:.3f},{r['new']:.3f},"
+              f"{r['ratio']:.3f}{flag}")
+    if d["missing"]:
+        print(f"# rows only in baseline (not compared): {d['missing']}")
+
+    if d["regressions"]:
+        worst = max(r["ratio"] for r in d["regressions"])
+        print(f"# {len(d['regressions'])}/{len(d['rows'])} rows regressed "
+              f"past +{args.threshold * 100:.0f}% (worst {worst:.2f}x)")
+        return 0 if args.warn_only else 1
+    print(f"# all {len(d['rows'])} rows within "
+          f"+{args.threshold * 100:.0f}%")
+    return 0
+
+
+if __name__ == "__main__":                                # pragma: no cover
+    raise SystemExit(main())

@@ -1,0 +1,114 @@
+"""Property tests for the in-scan probe reductions (repro.obs.probes).
+
+Invariant: for ANY (stride, op, n_ticks), the strided/windowed probe
+buffers computed inside the scan carry must equal the same reduction
+applied to the full-resolution per-tick records after the fact —
+tumbling windows of ``stride`` ticks, final partial window included,
+``mean`` dividing by the true window length, ``ema`` one continuous
+float32 average over the whole run sampled at window ends.
+
+The probes run against the real engine (8-PE synfire chip program), so
+the property also covers the engine plumbing: rec-shape discovery via
+``eval_shape``, carry threading, and buffer slot indexing.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.chip.chip import ChipSim
+from repro.chip.compile import compile as compile_graph
+from repro.chip.workloads import synfire_graph
+from repro.obs import ProbeSpec
+from repro.obs.probes import n_probe_samples
+
+MAX_TICKS = 48
+_SIM = ChipSim(compile_graph(synfire_graph(8)))
+# full-resolution reference records, one run per n_ticks (cached — the
+# engine is deterministic, so slicing a longer run would NOT be valid:
+# state carries across ticks but records are per-tick, so prefixes agree)
+_FULL = {}
+
+
+def _full(n_ticks: int) -> dict:
+    if n_ticks not in _FULL:
+        recs = _SIM.run(n_ticks)
+        _FULL[n_ticks] = {k: np.asarray(v) for k, v in recs.items()}
+    return _FULL[n_ticks]
+
+
+def _windows(n_ticks: int, stride):
+    s = n_ticks if stride is None else min(stride, n_ticks)
+    return [(lo, min(lo + s, n_ticks)) for lo in range(0, n_ticks, s)]
+
+
+def _reference(sig: np.ndarray, op: str, stride, alpha: float) -> np.ndarray:
+    """The probe's contract, written the slow obvious way."""
+    n_ticks = sig.shape[0]
+    sig = sig.astype(np.float32)
+    if op == "ema":
+        ema = sig[0]
+        series = [ema]
+        for t in range(1, n_ticks):
+            ema = np.float32(alpha) * sig[t] + np.float32(1 - alpha) * ema
+            series.append(ema)
+        return np.stack([series[hi - 1] for _, hi in
+                         _windows(n_ticks, stride)])
+    outs = []
+    for lo, hi in _windows(n_ticks, stride):
+        w = sig[lo:hi]
+        if op == "peak":
+            outs.append(w.max(axis=0))
+        elif op == "mean":
+            outs.append(w.sum(axis=0, dtype=np.float32) / (hi - lo))
+        elif op == "sum":
+            outs.append(w.sum(axis=0, dtype=np.float32))
+        else:                                                  # last
+            outs.append(w[-1])
+    return np.stack(outs)
+
+
+@st.composite
+def probe_cases(draw):
+    n_ticks = draw(st.integers(min_value=1, max_value=MAX_TICKS))
+    stride = draw(st.one_of(
+        st.none(), st.integers(min_value=1, max_value=MAX_TICKS + 8)))
+    op = draw(st.sampled_from(("peak", "mean", "sum", "last", "ema")))
+    key = draw(st.sampled_from(("link_flits", "packets", "pl", "e_noc")))
+    alpha = draw(st.sampled_from((0.05, 0.25, 1.0)))
+    return n_ticks, stride, op, key, alpha
+
+
+@settings(max_examples=30, deadline=None)
+@given(probe_cases())
+def test_strided_probe_matches_full_resolution_reduction(case):
+    n_ticks, stride, op, key, alpha = case
+    spec = ProbeSpec("p", key, op, stride=stride, alpha=alpha)
+    out = _SIM.run(n_ticks, probes=(spec,), keep_records=False)
+    buf = np.asarray(out["probes"]["p"])
+    ref = _reference(_full(n_ticks)[key], op, stride, alpha)
+    assert buf.shape[0] == n_probe_samples(n_ticks, stride) == ref.shape[0]
+    if op in ("peak", "last"):
+        # pure selections of recorded float32 values — exact
+        np.testing.assert_array_equal(buf, ref)
+    else:
+        # identical float32 fold order => tight tolerance
+        np.testing.assert_allclose(buf, ref, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=MAX_TICKS))
+def test_whole_run_probe_equals_numpy_reduction(n_ticks):
+    """stride=None is exactly one window covering the full run."""
+    out = _SIM.run(n_ticks, probes=(
+        ProbeSpec("pk", "link_flits", "peak"),
+        ProbeSpec("sm", "packets", "sum"),
+    ), keep_records=False)["probes"]
+    full = _full(n_ticks)
+    assert out["pk"].shape[0] == out["sm"].shape[0] == 1
+    np.testing.assert_array_equal(np.asarray(out["pk"])[0],
+                                  full["link_flits"].max(axis=0))
+    np.testing.assert_allclose(
+        np.asarray(out["sm"])[0],
+        full["packets"].astype(np.float32).sum(axis=0), rtol=1e-6)
