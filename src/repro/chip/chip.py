@@ -92,49 +92,22 @@ class ChipSim:
                     and sinc.max_fan_in <= MAX_SPARSE_COLS)
         return mode == "sparse"
 
-    def run(self, n_ticks: int, seed: int = 1, noc_mode: str | None = None,
-            link_load_impl: str | None = None, probes=(),
-            keep_records: bool = True) -> dict:
-        """Per-tick records: everything the program's semantics reports
-        (spike rasters / layer occupancy / decoded signals, PLs, Eq. (1)
-        energies), plus the engine's NoC accounting:
+    def make_stepper(self, seed: int = 1, noc_mode: str | None = None,
+                     link_load_impl: str | None = None):
+        """The batched-carry entry point: ``(init_state, step)`` where
+        ``step(state, t) -> (state, rec)`` is the engine's FULL per-tick
+        body — semantics tick, on-mesh learning, NoC accounting (sparse
+        or dense, tiered for boards) — exactly as ``run`` scans it.
 
-        link_load  (T, n_links) — packets per link per tick
-        link_flits (T, n_links) — DNoC flits per link per tick (graded
-                                  multi-flit packets weigh more)
-        e_noc      (T,)         — NoC traffic energy per tick [J]
-
-        and, when the program has plastic projections (``learn_slots``),
-        the learning tier: weights/traces advance in the scan carry each
-        tick (``repro.learn.engine``) and
-
-        e_learn    (T, P)       — per-PE learning energy per tick [J]
-                                  (MAC-class weight updates + exp-
-                                  accelerator trace decays)
-
-        and, when the program's NoC is tiered (a board: on-chip links plus
-        chip-to-chip links), the per-tier split:
-
-        load_xchip / flits_xchip (T,) — packet/flit traversals of
-                                  chip-to-chip links this tick
-        e_noc_xchip (T,)        — chip-to-chip share of e_noc [J]
-
-        ``noc_mode`` overrides the sim's representation choice per run;
-        sparse and dense produce bit-identical records, as do the sparse
-        kernels selected by ``link_load_impl``.  For the synfire program
-        the neuron dynamics are the SAME tick function the single-chip
-        path scans (``make_synfire_tick``), so an 8-PE ChipSim reproduces
-        ``simulate_synfire`` rasters bit for bit.
-
-        ``probes`` (``repro.obs.probes``: ProbeSpec instances or registry
-        names) compiles strided/windowed telemetry accumulators into the
-        scan carry, returned under ``recs["probes"]``.  The probe step
-        runs AFTER the tick — it reads records, never state — so probed
-        runs produce bit-identical per-tick records, and with the default
-        ``probes=()`` the traced tick body (and carry) is EXACTLY the
-        bare engine's.  ``keep_records=False`` (probed runs only) drops
-        the full (T, ...) per-tick records and returns just the probe
-        output — the memory-bounded mode for long board-scale runs.
+        ``run`` itself is ``lax.scan(step, init, arange(n_ticks))``, so
+        anything that composes ``step`` differently — the serving tier's
+        ``jax.vmap`` over a fleet of independent instances
+        (``repro.serve.fleet``), chunked stepping with checkpoint /
+        restore of the carry between chunks, interleaved host I/O —
+        computes bit-identical per-tick records to a plain ``run`` of
+        the same program.  The carry returned by ``step`` is the full
+        engine state (workload state incl. the ``learn`` subtree), which
+        is what ``repro.ckpt`` snapshots for session save/restore.
         """
         prog = self.program
         tick = prog.make_tick(dvfs=self.dvfs, em=self.em,
@@ -202,6 +175,56 @@ class ChipSim:
                 rec["e_noc_xchip"] = noc.xchip_energy_j(packets,
                                                         tree_links_x, pb)
             return state, rec
+
+        return init, chip_tick
+
+    def run(self, n_ticks: int, seed: int = 1, noc_mode: str | None = None,
+            link_load_impl: str | None = None, probes=(),
+            keep_records: bool = True) -> dict:
+        """Per-tick records: everything the program's semantics reports
+        (spike rasters / layer occupancy / decoded signals, PLs, Eq. (1)
+        energies), plus the engine's NoC accounting:
+
+        link_load  (T, n_links) — packets per link per tick
+        link_flits (T, n_links) — DNoC flits per link per tick (graded
+                                  multi-flit packets weigh more)
+        e_noc      (T,)         — NoC traffic energy per tick [J]
+
+        and, when the program has plastic projections (``learn_slots``),
+        the learning tier: weights/traces advance in the scan carry each
+        tick (``repro.learn.engine``) and
+
+        e_learn    (T, P)       — per-PE learning energy per tick [J]
+                                  (MAC-class weight updates + exp-
+                                  accelerator trace decays)
+
+        and, when the program's NoC is tiered (a board: on-chip links plus
+        chip-to-chip links), the per-tier split:
+
+        load_xchip / flits_xchip (T,) — packet/flit traversals of
+                                  chip-to-chip links this tick
+        e_noc_xchip (T,)        — chip-to-chip share of e_noc [J]
+
+        ``noc_mode`` overrides the sim's representation choice per run;
+        sparse and dense produce bit-identical records, as do the sparse
+        kernels selected by ``link_load_impl``.  For the synfire program
+        the neuron dynamics are the SAME tick function the single-chip
+        path scans (``make_synfire_tick``), so an 8-PE ChipSim reproduces
+        ``simulate_synfire`` rasters bit for bit.
+
+        ``probes`` (``repro.obs.probes``: ProbeSpec instances or registry
+        names) compiles strided/windowed telemetry accumulators into the
+        scan carry, returned under ``recs["probes"]``.  The probe step
+        runs AFTER the tick — it reads records, never state — so probed
+        runs produce bit-identical per-tick records, and with the default
+        ``probes=()`` the traced tick body (and carry) is EXACTLY the
+        bare engine's.  ``keep_records=False`` (probed runs only) drops
+        the full (T, ...) per-tick records and returns just the probe
+        output — the memory-bounded mode for long board-scale runs.
+        """
+        prog = self.program
+        init, chip_tick = self.make_stepper(seed=seed, noc_mode=noc_mode,
+                                            link_load_impl=link_load_impl)
 
         if not probes:
             if not keep_records:

@@ -249,6 +249,37 @@ def make_probe_step(probes: tuple, rec_shapes: dict, n_ticks: int):
     return init, step, finalize
 
 
+def make_batched_probe_step(probes: tuple, rec_shapes: dict, n_ticks: int,
+                            batch: int):
+    """``make_probe_step`` over a leading fleet/batch axis.
+
+    The serving tier runs ``batch`` independent instances of one program
+    under ``jax.vmap``; each instance carries its OWN probe accumulators
+    and its own local tick counter (sessions start at different times, so
+    the per-instance ``t`` drives each instance's window boundaries
+    independently).  Returns ``(init, step, finalize)`` exactly as the
+    unbatched compiler, except every tree leaf gains a leading ``batch``
+    axis and ``step(obs, rec, t)`` takes batched rec/t:
+
+    * ``init`` — the unbatched probe subtree broadcast to ``(batch, ...)``;
+    * ``step(obs, rec, t)`` — ``vmap`` of the unbatched step: ``rec``
+      leaves are ``(batch, ...)``, ``t`` is ``(batch,)`` int32 of each
+      instance's local tick;
+    * ``finalize(obs) -> {name: (batch, n_samples, ...)}``.
+
+    Per instance the arithmetic is the unbatched fold verbatim, so slicing
+    instance ``i`` out of every buffer equals running that instance alone
+    — the property the probe tests pin.
+    """
+    init, step, finalize = make_probe_step(probes, rec_shapes, n_ticks)
+    binit = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (batch,) + x.shape), init)
+    bstep = jax.vmap(step, in_axes=(0, 0, 0))
+    # finalize only gathers buffers out of the carry — it maps over the
+    # batched tree unchanged, yielding (batch, n_samples, ...) timelines
+    return binit, bstep, finalize
+
+
 # ---------------------------------------------------------------------------
 # The link-profile probe set (shared by both scale benchmarks)
 # ---------------------------------------------------------------------------

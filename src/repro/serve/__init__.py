@@ -1,1 +1,2 @@
 from repro.serve.engine import ServeEngine, Request
+from repro.serve.queue import RequestQueue, percentiles, select_width

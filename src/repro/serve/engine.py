@@ -21,6 +21,7 @@ import numpy as np
 from repro.core.dvfs import QueueDVFS
 from repro.core.energy import TPUEnergyModel
 from repro.models import transformer as T
+from repro.serve.queue import RequestQueue, select_width
 
 
 def sample_logits(logits, key, *, temperature: float = 0.0, top_k: int = 0):
@@ -60,7 +61,9 @@ class ServeEngine:
         self._key = jax.random.PRNGKey(seed)
         self.mesh = mesh
         self.energy = TPUEnergyModel()
-        self.queue: list[Request] = []
+        # the shared serving-tier admission queue (repro.serve.queue) —
+        # the same class the neuromorphic FleetEngine admits sessions from
+        self.queue = RequestQueue()
         self.stats = {"tokens": 0, "rounds": 0, "batch_hist": []}
 
         self._prefill = jax.jit(
@@ -70,7 +73,7 @@ class ServeEngine:
             lambda p, c, pos, b: T.decode_step(cfg, p, c, pos, b))
 
     def submit(self, req: Request):
-        self.queue.append(req)
+        self.queue.submit(req)
 
     def _sample(self, logits):
         lg = logits[:, -1]
@@ -112,10 +115,10 @@ class ServeEngine:
     def run(self):
         """Drain the queue with DVFS-selected batch widths."""
         while self.queue:
-            width = self.dvfs.batch_size(len(self.queue))
-            batch = self.queue[:width]
-            self.queue = self.queue[width:]
+            width = select_width(self.dvfs, self.queue, in_flight=0)
+            batch = self.queue.take(width)
             self.stats["rounds"] += 1
             self.stats["batch_hist"].append(len(batch))
             self._run_batch(batch)
+        self.stats["queue"] = self.queue.stats()
         return self.stats

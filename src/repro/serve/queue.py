@@ -1,0 +1,104 @@
+"""Shared request queue + admission accounting for the serving tier.
+
+Both serving engines sit on this one module: the seed LM ``ServeEngine``
+(queue of decode ``Request`` objects, drained in DVFS-selected batch
+widths) and the neuromorphic ``FleetEngine`` (queue of pending user
+sessions admitted into vmapped board instances).  The queue is the
+activity signal of the paper's spike-FIFO -> performance-level loop
+applied to serving: its depth feeds ``repro.core.dvfs.QueueDVFS``, which
+selects how wide the machine runs this round.
+
+``RequestQueue`` is FIFO with one twist the fleet needs: ``submit(...,
+front=True)`` re-queues a preempted (checkpointed) session at the head,
+so sessions evicted when the fleet narrows resume before new arrivals
+are admitted.  Every item's queue wait is recorded at ``take`` time, so
+admission latency lands in the serving stats for free.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+
+class RequestQueue:
+    """FIFO admission queue shared by the LM and fleet serving engines."""
+
+    def __init__(self, clock=time.perf_counter):
+        self._q: deque = deque()          # (item, enqueue_time)
+        self._clock = clock
+        self.submitted = 0
+        self.taken = 0
+        self.wait_s: list = []            # queue wait of every taken item
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+    @property
+    def depth(self) -> int:
+        return len(self._q)
+
+    def submit(self, item, *, front: bool = False) -> None:
+        """Enqueue ``item``; ``front=True`` puts it at the head (used for
+        preempted sessions so they resume before fresh arrivals)."""
+        entry = (item, self._clock())
+        if front:
+            self._q.appendleft(entry)
+        else:
+            self._q.append(entry)
+        self.submitted += 1
+
+    def extend(self, items) -> None:
+        for it in items:
+            self.submit(it)
+
+    def take(self, n: int) -> list:
+        """Dequeue up to ``n`` items in order, recording each one's queue
+        wait (seconds between submit and take)."""
+        now = self._clock()
+        out = []
+        while self._q and len(out) < n:
+            item, t0 = self._q.popleft()
+            self.wait_s.append(now - t0)
+            out.append(item)
+        self.taken += len(out)
+        return out
+
+    def peek_depth_with(self, in_flight: int = 0) -> int:
+        """The admission-control activity signal: waiting + in-flight.
+
+        Feeding only the waiting depth to ``QueueDVFS`` would collapse
+        the width the moment the queue drains even with a full fleet in
+        flight; offered load is both terms."""
+        return len(self._q) + in_flight
+
+    def stats(self) -> dict:
+        w = np.asarray(self.wait_s, np.float64)
+        return {
+            "submitted": self.submitted,
+            "taken": self.taken,
+            "waiting": len(self._q),
+            "wait_p50_s": float(np.percentile(w, 50)) if w.size else 0.0,
+            "wait_p99_s": float(np.percentile(w, 99)) if w.size else 0.0,
+        }
+
+
+def percentiles(samples, ps=(50, 99)) -> dict:
+    """{p50: ..., p99: ...} of ``samples`` (0.0s when empty) — the one
+    latency summary both serving engines report."""
+    a = np.asarray(list(samples), np.float64)
+    return {f"p{p}": (float(np.percentile(a, p)) if a.size else 0.0)
+            for p in ps}
+
+
+def select_width(dvfs, queue: RequestQueue, in_flight: int,
+                 capacity: Optional[int] = None) -> int:
+    """Activity-driven width: offered load (waiting + in-flight) through
+    ``QueueDVFS.batch_size``, clamped to ``capacity``."""
+    width = dvfs.batch_size(queue.peek_depth_with(in_flight))
+    return min(width, capacity) if capacity is not None else width

@@ -134,3 +134,37 @@ def test_straggler_detection(tmp_path):
         on_straggler=lambda s, dt, ema: seen.append(s))
     loop.run(params, opt)
     assert 10 in seen
+
+
+def test_engine_scan_carry_roundtrip_bitwise(tmp_path):
+    """The neuromorphic engine's scan carry (LIF + plant + LEARN state)
+    saved mid-run, restored into a fresh tree, and continued must be
+    bitwise identical to the uninterrupted run — the property the
+    serving tier's session checkpoint/restore is built on."""
+    from repro.chip.chip import ChipSim
+    from repro.chip.compile import compile as compile_graph
+    from repro.learn.adaptive import adaptive_control_graph
+
+    g = adaptive_control_graph(n_channels=2, n_neurons=24, n_ticks=64)
+    init, tick = ChipSim(compile_graph(g)).make_stepper()
+
+    def run(st, t0, n):
+        return jax.lax.scan(tick, st, t0 + jnp.arange(n))
+    runj = jax.jit(run, static_argnums=2)
+
+    ref_st, ref_recs = runj(init, 0, 32)
+
+    st16, recs_a = runj(init, 0, 16)
+    assert "learn" in st16                      # the plastic subtree rides
+    m = CheckpointManager(tmp_path, async_save=False)
+    m.save(16, st16, meta={"ticks_done": 16})
+    restored, manifest = m.restore(st16)
+    assert manifest["step"] == 16
+    assert manifest["meta"]["ticks_done"] == 16
+    st32, recs_b = runj(restored, 16, 16)
+
+    for a, b in zip(jax.tree.leaves(ref_st), jax.tree.leaves(st32)):
+        assert a.dtype == b.dtype and bool(jnp.all(a == b))
+    for k in ("u", "track_err", "dec_norm", "n_spk"):
+        full = np.concatenate([np.asarray(recs_a[k]), np.asarray(recs_b[k])])
+        np.testing.assert_array_equal(full, np.asarray(ref_recs[k]))

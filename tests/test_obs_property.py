@@ -112,3 +112,58 @@ def test_whole_run_probe_equals_numpy_reduction(n_ticks):
     np.testing.assert_allclose(
         np.asarray(out["sm"])[0],
         full["packets"].astype(np.float32).sum(axis=0), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Batched probes (the serving tier's per-instance accumulators)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def batched_probe_cases(draw):
+    batch = draw(st.integers(min_value=1, max_value=4))
+    n_ticks = draw(st.integers(min_value=2, max_value=24))
+    n_steps = draw(st.integers(min_value=1, max_value=16))
+    stride = draw(st.one_of(st.none(),
+                            st.integers(min_value=1, max_value=28)))
+    op = draw(st.sampled_from(("peak", "mean", "sum", "last", "ema")))
+    alpha = draw(st.sampled_from((0.05, 0.25, 1.0)))
+    offsets = draw(st.lists(st.integers(min_value=0, max_value=n_ticks - 1),
+                            min_size=batch, max_size=batch))
+    seed = draw(st.integers(min_value=0, max_value=2**16))
+    return batch, n_ticks, n_steps, stride, op, alpha, offsets, seed
+
+
+@settings(max_examples=30, deadline=None)
+@given(batched_probe_cases())
+def test_batched_probe_equals_per_instance_fold(case):
+    """``make_batched_probe_step`` over B instances with DISTINCT local
+    tick counters must equal B independent unbatched folds, bitwise —
+    the invariant that lets fleet sessions carry probe state through
+    slot moves, preemption, and width changes."""
+    import jax
+    import jax.numpy as jnp
+    from repro.obs.probes import make_batched_probe_step, make_probe_step
+
+    batch, n_ticks, n_steps, stride, op, alpha, offsets, seed = case
+    rng = np.random.default_rng(seed)
+    sig = rng.uniform(0.0, 8.0, (batch, n_steps, 3)).astype(np.float32)
+    specs = (ProbeSpec("p", "sig", op, stride=stride, alpha=alpha),)
+    shapes = {"sig": jax.ShapeDtypeStruct((3,), jnp.float32)}
+
+    init, step, fin = make_probe_step(specs, shapes, n_ticks)
+    binit, bstep, bfin = make_batched_probe_step(specs, shapes, n_ticks,
+                                                 batch)
+    offs = np.asarray(offsets, np.int32)
+    obs_b = binit
+    for j in range(n_steps):
+        obs_b = bstep(obs_b, {"sig": jnp.asarray(sig[:, j])},
+                      jnp.asarray(offs + j))
+    out_b = np.asarray(bfin(obs_b)["p"])
+    assert out_b.shape == (batch, n_probe_samples(n_ticks, stride), 3)
+
+    for i in range(batch):
+        obs = init
+        for j in range(n_steps):
+            obs = step(obs, {"sig": jnp.asarray(sig[i, j])},
+                       jnp.int32(offs[i] + j))
+        np.testing.assert_array_equal(out_b[i], np.asarray(fin(obs)["p"]))
