@@ -18,8 +18,11 @@ build, compile and per-tick engine time separately plus a sparse-vs-dense
 microbench of the per-tick link/flit accounting — the numbers behind
 BENCH_pr3.json.  ``--probe-overhead`` additionally times the engine with
 the default telemetry probe set compiled into the scan (the < 10%
-overhead budget of BENCH_pr6.json); ``--json`` writes a manifest-stamped
-artifact.
+overhead budget of BENCH_pr6.json); ``--exec-mode event|both`` times the
+activity-compressed event engine next to (or instead of) the dense rows
+and ``--activity`` stamps each row with its mean active-source fraction —
+the dense-vs-event pairs behind BENCH_pr8.json; ``--json`` writes a
+manifest-stamped artifact.
 """
 from __future__ import annotations
 
@@ -117,7 +120,14 @@ def dnn_layers_for_pes(n_pes: int, pe: PESpec = PESpec()) -> list:
 
 def build_scaled_graph(cls: str, n_pes: int):
     if cls == "synfire":
-        return synfire_graph(n_pes, sp=SCALED_SYNFIRE)
+        # shot-noise drive (deterministic per (seed, tick)) with the
+        # Gaussian sub-threshold jitter off: the wave still propagates
+        # (~1.6 spikes/tick ring-wide) but the background is silent, so
+        # the sweep exercises the activity sparsity the event engine
+        # compresses.  Dense tick cost is activity-independent, so the
+        # dense rows stay comparable to earlier BENCH artifacts.
+        return synfire_graph(n_pes, sp=SCALED_SYNFIRE, w_exc=0.25,
+                             noise_sigma=0.0, noise_model="shot")
     if cls == "dnn":
         return dnn_graph(dnn_layers_for_pes(n_pes))
     if cls == "hybrid":
@@ -129,7 +139,8 @@ def sweep(sizes=(256, 1024, 4096), n_ticks: int = 64,
           classes=("synfire", "dnn", "hybrid"),
           compile_budget_s: float | None = None,
           noc_batch: int = 64, profile_links: bool = False,
-          probe_overhead: bool = False) -> dict:
+          probe_overhead: bool = False, exec_mode: str = "dense",
+          activity: bool = False) -> dict:
     """Compile + run each workload class at each mesh size.
 
     Reported separately per (class, size):
@@ -143,6 +154,14 @@ def sweep(sizes=(256, 1024, 4096), n_ticks: int = 64,
       probe_us / probe_overhead — (with ``probe_overhead=True``) per-tick
                    wall time with the default telemetry probe set in the
                    scan carry, and its relative cost vs the bare engine
+
+    ``exec_mode`` selects the engine execution mode for the timed rows:
+    ``"dense"`` (the always-on per-PE tick, baseline-comparable),
+    ``"event"`` (activity-compressed ticks, rows suffixed ``_event``) or
+    ``"both"`` — a dense/event row PAIR per (class, size), the event row
+    carrying ``dense_tick_us`` + ``event_vs_dense`` speedup.  With
+    ``activity=True`` each row also reports the run's mean
+    ``active_frac`` (active sources / sources per tick).
 
     ``profile_links`` records per-link peak/mean flit profiles for each
     class's largest mesh through the whole-run link probes (parity with
@@ -169,11 +188,26 @@ def sweep(sizes=(256, 1024, 4096), n_ticks: int = 64,
             # engine per-tick, auto-selected NoC path, compiled-once scan:
             # the first call pays the scan trace + XLA compile, the
             # steady-state median is the per-tick number
-            sim = ChipSim(prog)
-            runner = jax.jit(lambda: sim.run(n_ticks))
-            with tm.phase("first_tick_jit"):
-                jax.block_until_ready(runner())
-            tick_us = time_call(runner, warmup=0, iters=3) / n_ticks
+            modes = ("dense", "event") if exec_mode == "both" \
+                else (exec_mode,)
+            mode_us: dict = {}
+            mode_frac: dict = {}
+            sim = None
+            for mode in modes:
+                msim = ChipSim(prog, exec_mode=mode)
+                sim = sim or msim
+                runner = jax.jit(lambda s=msim: s.run(n_ticks))
+                tag = "first_tick_jit" if mode == modes[0] \
+                    else f"first_tick_jit_{mode}"
+                with tm.phase(tag):
+                    jax.block_until_ready(runner())
+                mode_us[mode] = time_call(runner, warmup=0,
+                                          iters=3) / n_ticks
+                if activity:
+                    frac = runner().get("active_frac")
+                    if frac is not None:
+                        mode_frac[mode] = float(np.asarray(frac).mean())
+            tick_us = mode_us[modes[0]]
             tm.record("steady_tick", tick_us * 1e-6)
 
             probe_str = ""
@@ -219,17 +253,27 @@ def sweep(sizes=(256, 1024, 4096), n_ticks: int = 64,
             de_us = min(time_call(f_de, iters=5) for _ in range(3)) \
                 / noc_batch
 
-            name = f"scale_{cls}_{P}pe"
-            phase_timers[name] = tm.asdict()
-            emit(name, tick_us,
-                 f"mesh={prog.mesh.width}x{prog.mesh.height};"
-                 f"links={noc.n_links};nnz={prog.sinc.nnz};"
-                 f"density={prog.sinc.density:.4f};"
-                 f"build_s={tm['build']:.3f};compile_s={tm['compile']:.3f};"
-                 f"jit_s={tm['first_tick_jit']:.3f};"
-                 f"noc_sparse_us={sp_us:.2f};noc_dense_us={de_us:.2f};"
-                 f"noc_speedup={de_us / sp_us:.2f};"
-                 f"worst_hops={prog.worst_tree_hops}{probe_str}")
+            base = f"scale_{cls}_{P}pe"
+            phase_timers[base] = tm.asdict()
+            shared = (
+                f"mesh={prog.mesh.width}x{prog.mesh.height};"
+                f"links={noc.n_links};nnz={prog.sinc.nnz};"
+                f"density={prog.sinc.density:.4f};"
+                f"build_s={tm['build']:.3f};compile_s={tm['compile']:.3f};"
+                f"jit_s={tm['first_tick_jit']:.3f};"
+                f"noc_sparse_us={sp_us:.2f};noc_dense_us={de_us:.2f};"
+                f"noc_speedup={de_us / sp_us:.2f};"
+                f"worst_hops={prog.worst_tree_hops}{probe_str}")
+            for mode in modes:
+                name = base if mode == "dense" else f"{base}_{mode}"
+                extra = f";exec_mode={mode}"
+                if mode in mode_frac:
+                    extra += f";active_frac={mode_frac[mode]:.4f}"
+                if mode == "event" and "dense" in mode_us:
+                    extra += (f";dense_tick_us={mode_us['dense']:.1f};"
+                              f"event_vs_dense="
+                              f"{mode_us['dense'] / mode_us[mode]:.2f}")
+                emit(name, mode_us[mode], shared + extra)
     return {"link_profiles": link_profiles, "phase_timers": phase_timers}
 
 
@@ -249,6 +293,14 @@ if __name__ == "__main__":
     ap.add_argument("--probe-overhead", action="store_true",
                     help="also time the engine with the default telemetry "
                     "probe set (the BENCH_pr6 < 10%% overhead budget)")
+    ap.add_argument("--exec-mode", default="dense",
+                    choices=["dense", "event", "both"],
+                    help="engine execution mode for the sweep rows; "
+                    "'both' emits a dense/event row pair per (class, "
+                    "size) with the event-vs-dense speedup")
+    ap.add_argument("--activity", action="store_true",
+                    help="record a run per mode and add its mean "
+                    "active-source fraction to each sweep row")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write rows as machine-readable JSON "
                     "(manifest-stamped)")
@@ -262,7 +314,9 @@ if __name__ == "__main__":
                        classes=tuple(args.classes.split(",")),
                        compile_budget_s=args.budget_s,
                        profile_links=args.profile_links,
-                       probe_overhead=args.probe_overhead)
+                       probe_overhead=args.probe_overhead,
+                       exec_mode=args.exec_mode,
+                       activity=args.activity)
     else:
         main()
 

@@ -46,10 +46,11 @@ def print_noc_and_power(sim, recs):
 def run_synfire(args):
     graph = synfire_graph(args.pes)
     prog = compile_graph(graph)
-    sim = ChipSim(prog)
+    sim = ChipSim(prog, exec_mode=args.exec_mode)
     m = prog.mesh
     print(f"{args.pes}-PE synfire ring on a {m.width}x{m.height} QPE mesh "
-          f"({prog.noc.n_links} directed links)")
+          f"({prog.noc.n_links} directed links), "
+          f"exec_mode={args.exec_mode}")
 
     recs = sim.run(args.ticks)
     spk = np.asarray(recs["spikes_exc"]).sum(axis=2)      # (T, P)
@@ -96,6 +97,10 @@ def main():
     ap.add_argument("--ticks", type=int, default=700)
     ap.add_argument("--workload", default="synfire",
                     choices=["synfire", "dnn", "hybrid"])
+    ap.add_argument("--exec-mode", default="auto",
+                    choices=["auto", "dense", "event"],
+                    help="engine execution mode (synfire workload): the "
+                    "event engine is bitwise-identical to dense")
     args = ap.parse_args()
     {"synfire": run_synfire, "dnn": run_dnn, "hybrid": run_hybrid}[
         args.workload](args)

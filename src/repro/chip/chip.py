@@ -54,12 +54,27 @@ class ChipSim:
     ``link_load_impl`` overrides the program NoC's sparse accumulation
     kernel (None defers to the NoC's own knob: "auto" -> the CPU column
     plan; "pallas" -> the prefix-sum kernel, interpret-mode on CPU).
+
+    ``exec_mode`` selects the execution mode: "dense" runs the per-PE
+    work of every tick at full width; "event" runs the workload's
+    activity-compressed tick (when its semantics provides one —
+    ``make_event_tick``) and the event-mode NoC accounting; "auto" picks
+    event exactly when the NoC auto-select goes sparse (the same
+    board-scale regime).  Event mode is bitwise-identical to dense on
+    every record — rasters, probes, energies — by construction; the
+    compressed tick falls back to the dense formulas inside the scan
+    whenever a tick's activity overflows the event buffer.
+    ``event_impl`` picks the event NoC kernel (``repro.kernels.
+    event_gather``: "auto" delegates to the column plan on CPU;
+    "gather"/"pallas" force the compacted-index variants).
     """
     program: ChipProgram
     dvfs: Optional[DVFSController] = None
     em: PEEnergyModel = field(default_factory=PEEnergyModel)
     noc_mode: str = "auto"
     link_load_impl: Optional[str] = None
+    exec_mode: str = "auto"
+    event_impl: Optional[str] = None
 
     def __post_init__(self):
         if self.dvfs is None:
@@ -92,8 +107,21 @@ class ChipSim:
                     and sinc.max_fan_in <= MAX_SPARSE_COLS)
         return mode == "sparse"
 
+    def use_event_mode(self, exec_mode: str | None = None) -> bool:
+        """Resolve the execution mode for this program: "auto" picks the
+        activity-compressed mode exactly when the NoC auto-select goes
+        sparse — the same mesh-scale/density regime where per-tick dense
+        work dominates and activity is sparse relative to it."""
+        mode = exec_mode or self.exec_mode
+        if mode not in ("auto", "event", "dense"):
+            raise ValueError(f"unknown exec_mode {mode!r}")
+        if mode == "auto":
+            return self.use_sparse_noc("auto")
+        return mode == "event"
+
     def make_stepper(self, seed: int = 1, noc_mode: str | None = None,
-                     link_load_impl: str | None = None):
+                     link_load_impl: str | None = None,
+                     exec_mode: str | None = None):
         """The batched-carry entry point: ``(init_state, step)`` where
         ``step(state, t) -> (state, rec)`` is the engine's FULL per-tick
         body — semantics tick, on-mesh learning, NoC accounting (sparse
@@ -110,8 +138,16 @@ class ChipSim:
         is what ``repro.ckpt`` snapshots for session save/restore.
         """
         prog = self.program
-        tick = prog.make_tick(dvfs=self.dvfs, em=self.em,
-                              key=jax.random.PRNGKey(seed))
+        event = self.use_event_mode(exec_mode)
+        key = jax.random.PRNGKey(seed)
+        tick = None
+        if event:
+            # the workload's activity-compressed tick; semantics without
+            # one run their dense tick under event-mode NoC/activity
+            # accounting (records stay bitwise-identical either way)
+            tick = prog.make_event_tick(dvfs=self.dvfs, em=self.em, key=key)
+        if tick is None:
+            tick = prog.make_tick(dvfs=self.dvfs, em=self.em, key=key)
         noc = self.noc
         # on-mesh learning: programs with plastic projections extend the
         # scan carry with per-slot weight/trace state, updated right after
@@ -138,10 +174,21 @@ class ChipSim:
         impl = noc.resolve_link_load_impl(link_load_impl
                                           or self.link_load_impl)
         sparse = self.use_sparse_noc(noc_mode)
-        if sparse:
+        if sparse and event:
+            plan = noc.event_plan(prog.sinc, impl=self.event_impl)
+        elif sparse:
             plan = noc.device_plan(prog.sinc, impl=impl)
         else:
             inc = jnp.asarray(prog.inc)
+        # activity telemetry (identical keys + values in both exec modes):
+        # per-link tier masks hoisted once, like the incidence.  Empty
+        # tiers (a 1x1 board's zero-link xchip tier) are dropped so the
+        # record keys — and the 1x1-board == single-chip bitwise
+        # guarantee — don't depend on the NoC class.
+        n_src = prog.sinc.n_sources
+        tier_masks = {tier: jnp.asarray(m)
+                      for tier, m in noc.tier_masks().items()
+                      if np.asarray(m).any()}
         tree_links = jnp.asarray(prog.energy_tree_links, jnp.float32)
         static_pb = jnp.asarray(prog.payload_bits)
         # tiered (board) NoC: static per-link tier mask + per-source
@@ -162,13 +209,25 @@ class ChipSim:
                 rec.update(lrec)
             packets = rec["packets"].astype(jnp.float32)    # (P,)
             pb = rec.get("payload_bits", static_pb)
-            if sparse:
+            if sparse and event:
+                rec["link_load"], rec["link_flits"] = noc.event_noc_loads(
+                    packets, plan, pb)
+            elif sparse:
                 rec["link_load"], rec["link_flits"] = noc.noc_loads(
                     packets, plan, pb)
             else:
                 rec["link_load"] = noc.link_loads(packets, inc)
                 rec["link_flits"] = noc.flit_loads(packets, inc, pb)
             rec["e_noc"] = noc.traffic_energy_j(packets, tree_links, pb)
+            # activity telemetry — emitted by BOTH modes from the same
+            # packet/load signals, so activity probes read identically
+            active = (rec["packets"] > 0).sum(axis=-1).astype(jnp.int32)
+            rec["active_sources"] = active
+            rec["active_frac"] = active.astype(jnp.float32) / max(n_src, 1)
+            hit = (rec["link_load"] > 0).astype(jnp.float32)
+            rec["touched_links"] = hit.sum(axis=-1)
+            for tier, m in tier_masks.items():
+                rec[f"touched_links_{tier}"] = hit @ m
             if tiered:
                 rec["load_xchip"] = (rec["link_load"] * xmask).sum(axis=-1)
                 rec["flits_xchip"] = (rec["link_flits"] * xmask).sum(axis=-1)
@@ -179,8 +238,8 @@ class ChipSim:
         return init, chip_tick
 
     def run(self, n_ticks: int, seed: int = 1, noc_mode: str | None = None,
-            link_load_impl: str | None = None, probes=(),
-            keep_records: bool = True) -> dict:
+            link_load_impl: str | None = None, exec_mode: str | None = None,
+            probes=(), keep_records: bool = True) -> dict:
         """Per-tick records: everything the program's semantics reports
         (spike rasters / layer occupancy / decoded signals, PLs, Eq. (1)
         energies), plus the engine's NoC accounting:
@@ -189,6 +248,10 @@ class ChipSim:
         link_flits (T, n_links) — DNoC flits per link per tick (graded
                                   multi-flit packets weigh more)
         e_noc      (T,)         — NoC traffic energy per tick [J]
+        active_sources (T,)     — sources emitting >= 1 packet this tick
+        active_frac (T,)        — active_sources / n_sources
+        touched_links (T,) + touched_links_<tier> — links carrying any
+                                  traffic this tick, total and per tier
 
         and, when the program has plastic projections (``learn_slots``),
         the learning tier: weights/traces advance in the scan carry each
@@ -207,7 +270,9 @@ class ChipSim:
 
         ``noc_mode`` overrides the sim's representation choice per run;
         sparse and dense produce bit-identical records, as do the sparse
-        kernels selected by ``link_load_impl``.  For the synfire program
+        kernels selected by ``link_load_impl``, as does the execution
+        mode selected by ``exec_mode`` ("event" = activity-compressed
+        tick + event NoC accounting; see the class docstring).  For the synfire program
         the neuron dynamics are the SAME tick function the single-chip
         path scans (``make_synfire_tick``), so an 8-PE ChipSim reproduces
         ``simulate_synfire`` rasters bit for bit.
@@ -224,7 +289,8 @@ class ChipSim:
         """
         prog = self.program
         init, chip_tick = self.make_stepper(seed=seed, noc_mode=noc_mode,
-                                            link_load_impl=link_load_impl)
+                                            link_load_impl=link_load_impl,
+                                            exec_mode=exec_mode)
 
         if not probes:
             if not keep_records:

@@ -101,6 +101,14 @@ class ChipProgram:
         return self.graph.semantics.make_tick(self, dvfs=dvfs, em=em,
                                               key=key)
 
+    def make_event_tick(self, *, dvfs, em, key):
+        """The semantics' activity-compressed tick, or None when the
+        workload has no compressed form (the engine then runs the dense
+        tick and keeps only the event-mode NoC/activity accounting —
+        still bitwise-identical records, just no tick-body speedup)."""
+        make = getattr(self.graph.semantics, "make_event_tick", None)
+        return make(self, dvfs=dvfs, em=em, key=key) if make else None
+
 
 def check_tile_sram(graph: NetGraph, pe: PESpec) -> None:
     """SRAM constraint per population tile, with an error naming the

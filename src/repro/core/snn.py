@@ -16,6 +16,26 @@ excitatory population (200) and one inhibitory population (50); exc of PE i
 projects to exc+inh of PE i+1 with 10 ms delay (fan-in 60); inh projects to
 exc of the same PE with 8 ms delay (fan-in 25); normally distributed noise
 current; a stimulus pulse packet kick-starts PE 0.
+
+Spike delay lines are stored bit-packed (one uint32 word per 32 neurons,
+``pack_spikes``/``unpack_spikes``): the d×P×n int32 ring buffers were the
+dominant per-tick cost at 4096 PEs (XLA copies the whole multi-MB carry on
+every ``.at[t % d].set``), and packing shrinks them 32×.  Packing is exact
+for 0/1 spike values, so dense and event mode share the same buffers.
+
+``make_synfire_tick(..., event=True)`` builds the activity-compressed tick
+(ISSUE 8): the per-tick input set — PEs with spike arrivals, noise kicks
+or stimulus — is compacted into a bounded index buffer by a two-level
+tag sort (active 64-PE chunks first, then candidate lanes within them),
+and the synaptic accumulation — the dominant dense cost, O(P*fan_in*N)
+integer MACs — runs on the compacted lanes only, scattered back with ONE
+bounded scatter.  Everything cheap-and-regular (LIF, DVFS energy pricing,
+record assembly) stays dense: on XLA CPU a fused elementwise pass over
+all P PEs costs far less than gather/scatter round trips.  Records are
+bitwise identical to the dense tick (integer accumulation is
+reassociation-exact; skipped PEs receive exactly the zero input the
+dense einsum computes for them), and a ``lax.cond`` falls back to the
+dense formulas whenever activity overflows the buffer.
 """
 from __future__ import annotations
 
@@ -36,6 +56,81 @@ from repro.kernels.lif.ref import lif_step_ref
 
 FX_ONE = 1 << 15
 
+# Default bound on the per-tick input buffer of the event tick: PEs with
+# spike arrivals, noise kicks or stimulus this tick.  A synfire wave
+# lights O(1) PEs per tick and shot noise adds kicks_per_tick more, so 64
+# covers 4096-PE rings with a wide margin; overflow falls back to the
+# dense formulas (still bitwise).
+EVENT_SRC_CAP = 64
+
+# Two-level compaction of the input set (see make_synfire_tick): PEs
+# group into chunks of EVENT_CHUNK; up to EVENT_MAX_CHUNKS active chunks
+# are selected by a cheap chunk-tag sort before the per-PE tag sort runs
+# on candidate lanes only — O(P/64 + 1024) sorted elements instead of P.
+EVENT_CHUNK = 64
+EVENT_MAX_CHUNKS = 16
+
+
+# ---------------------------------------------------------------- bit-packed
+# spike words: exact for 0/1 spikes, 32x smaller delay-line carries
+
+def spike_words(n: int) -> int:
+    """Number of uint32 words that hold ``n`` spike bits."""
+    return (n + 31) // 32
+
+
+def pack_spikes(spk: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Pack 0/1 spikes ``(..., n)`` into uint32 words ``(..., words(n))``."""
+    w = spike_words(n)
+    pad = w * 32 - n
+    if pad:
+        spk = jnp.pad(spk, [(0, 0)] * (spk.ndim - 1) + [(0, pad)])
+    bits = spk.reshape(spk.shape[:-1] + (w, 32)).astype(jnp.uint32)
+    return (bits << jnp.arange(32, dtype=jnp.uint32)).sum(
+        axis=-1, dtype=jnp.uint32)
+
+
+def unpack_spikes(words: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Inverse of ``pack_spikes``: uint32 words -> 0/1 int32 ``(..., n)``."""
+    bits = (words[..., None] >> jnp.arange(32, dtype=jnp.uint32)) & 1
+    flat = bits.reshape(words.shape[:-1] + (words.shape[-1] * 32,))
+    return flat[..., :n].astype(jnp.int32)
+
+
+def popcount_words(words: jnp.ndarray) -> jnp.ndarray:
+    """Spike count per row: popcount over the trailing word axis (int32)."""
+    return jax.lax.population_count(words).sum(axis=-1).astype(jnp.int32)
+
+
+# ------------------------------------------------------------------ shot noise
+# Deterministic per-(seed, tick) background input spikes ("shot noise"): a
+# fixed number of subthreshold current kicks lands on hash-picked neurons
+# each tick — the standard Poisson-background stand-in in SpiNNaker-scale
+# synfire studies, and (unlike dense Gaussian draws) O(kicks) not O(P*N),
+# so quiescent PEs really are quiescent and the event tick has something
+# to compress.  murmur3 finalizer = 2 mults + 3 xorshifts per kick.
+
+def _fmix32(x: jnp.ndarray) -> jnp.ndarray:
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _shot_seed32(key) -> jnp.ndarray:
+    kd = jax.random.key_data(key).astype(jnp.uint32).ravel()
+    return _fmix32(kd[-1] ^ _fmix32(kd[0]))
+
+
+def shot_noise_lanes(seed32, t, n_kicks: int, n_lanes: int):
+    """Flat lane index (< n_lanes) of each of this tick's ``n_kicks`` kicks."""
+    c = jnp.asarray(t).astype(jnp.uint32) * jnp.uint32(n_kicks) \
+        + jnp.arange(n_kicks, dtype=jnp.uint32)
+    return (_fmix32(c ^ seed32) % jnp.uint32(n_lanes)).astype(jnp.int32)
+
 
 @dataclass
 class SynfireNet:
@@ -48,6 +143,9 @@ class SynfireNet:
     noise_sigma_fx: int
     stim_ticks: int
     stim_current_fx: int
+    noise_model: str = "gauss"   # "gauss" (dense threefry) | "shot" (kicks)
+    kicks_per_tick: int = 0
+    kick_fx: int = 0
 
 
 def build_synfire(seed: int = 0, *, w_exc: float = 0.075, w_inh: float = -0.30,
@@ -55,9 +153,26 @@ def build_synfire(seed: int = 0, *, w_exc: float = 0.075, w_inh: float = -0.30,
                   v_th: float = 1.0, ref_ticks: int = 2,
                   sp: paper.SynfireParams = paper.SYNFIRE,
                   n_pes: int | None = None,
-                  v_min: float | None = -1.0) -> SynfireNet:
+                  v_min: float | None = -1.0,
+                  noise_model: str = "gauss",
+                  kicks_per_tick: int = 4,
+                  kick: float = 0.5) -> SynfireNet:
     """Build the synfire ring.  ``n_pes`` generalizes the fixed 8-PE test
-    chip ring to any length (repro.chip places long rings on a mesh)."""
+    chip ring to any length (repro.chip places long rings on a mesh).
+
+    ``noise_model="shot"`` replaces the dense Gaussian background current
+    with ``kicks_per_tick`` subthreshold current kicks (``kick`` in units
+    of v_th) on hash-picked neurons — sparse background input for the
+    event-driven engine's benchmark nets.  The 8-PE paper configuration
+    keeps the Gaussian default, so its goldens are untouched.
+    """
+    if noise_model not in ("gauss", "shot"):
+        raise ValueError(f"unknown noise_model {noise_model!r}")
+    if sp.neurons_per_core != sp.n_exc + sp.n_inh:
+        raise ValueError(
+            f"neurons_per_core ({sp.neurons_per_core}) must equal "
+            f"n_exc + n_inh ({sp.n_exc} + {sp.n_inh}): the membrane array "
+            f"is split [:n_exc]/[n_exc:] per PE")
     if n_pes is not None and n_pes != sp.n_pes:
         sp = dataclasses.replace(sp, n_pes=n_pes)
     rng = np.random.default_rng(seed)
@@ -88,74 +203,88 @@ def build_synfire(seed: int = 0, *, w_exc: float = 0.075, w_inh: float = -0.30,
         noise_sigma_fx=int(round(noise_sigma * FX_ONE)),
         stim_ticks=2,
         stim_current_fx=int(round(2.0 * FX_ONE)),
+        noise_model=noise_model,
+        kicks_per_tick=kicks_per_tick if noise_model == "shot" else 0,
+        kick_fx=int(round(kick * FX_ONE)) if noise_model == "shot" else 0,
     )
 
 
 def synfire_init_state(net: SynfireNet) -> dict:
-    """Zeroed membrane/refractory state and delay-line FIFO buffers."""
+    """Zeroed membrane/refractory state and bit-packed delay-line FIFOs."""
     sp = net.params
     P_, NE, NI = sp.n_pes, sp.n_exc, sp.n_inh
     N = sp.neurons_per_core
     return {
         "v": jnp.zeros((P_, N), jnp.int32),
         "ref": jnp.zeros((P_, N), jnp.int32),
-        "exc_buf": jnp.zeros((int(sp.delay_exc_ms), P_, NE), jnp.int32),
-        "inh_buf": jnp.zeros((int(sp.delay_inh_ms), P_, NI), jnp.int32),
+        "exc_buf": jnp.zeros((int(sp.delay_exc_ms), P_, spike_words(NE)),
+                             jnp.uint32),
+        "inh_buf": jnp.zeros((int(sp.delay_inh_ms), P_, spike_words(NI)),
+                             jnp.uint32),
     }
 
 
 def make_synfire_tick(net: SynfireNet, *, dvfs: DVFSController,
-                      em: PEEnergyModel, key, exchange=ring_exchange):
+                      em: PEEnergyModel, key, exchange=ring_exchange,
+                      event: bool = False, src_cap: int | None = None):
     """Build the per-tick step ``tick(state, t) -> (state, rec)``.
 
     ``exchange`` delivers each PE's exc spikes to its ring successor; the
     chip-level simulator passes the same function but adds NoC link-load
     accounting on top of the returned record (repro.chip.chip.ChipSim).
+
+    ``event=True`` builds the activity-compressed tick: this tick's input
+    set (spike arrivals + noise kicks + stimulus targets) is compacted
+    into ``src_cap`` index lanes by a two-level tag sort — active
+    ``EVENT_CHUNK``-PE chunks first, then per-PE tags on the surviving
+    candidate lanes — and the synaptic einsum gathers only the touched
+    weight slabs, writing back through ONE bounded scatter.  Kick and
+    stimulus currents land directly on their compacted lanes (every
+    kicked PE is in the input set by construction).  The LIF update and
+    the energy pricing stay dense: they are fused elementwise passes,
+    cheaper than gather/scatter round trips on CPU.  Activity overflow
+    falls back (``lax.cond``) to the dense formulas.  Records are
+    bitwise identical to ``event=False`` by construction: integer
+    accumulation is reassociation-exact, and a skipped PE's synaptic
+    input is exactly the zero row the dense einsum computes for it.
     """
     sp = net.params
     P_, NE, NI = sp.n_pes, sp.n_exc, sp.n_inh
     N = sp.neurons_per_core
     d_exc = int(sp.delay_exc_ms)
     d_inh = int(sp.delay_inh_ms)
+    cap = min(P_, src_cap if src_cap is not None else EVENT_SRC_CAP)
+    shot = net.noise_model == "shot" and net.kicks_per_tick > 0
+    seed32 = _shot_seed32(key) if shot else None
 
-    def tick(state, t):
+    def add_noise(i_syn, t):
+        """Background input current — identical formula in both modes."""
+        if shot:
+            lanes = shot_noise_lanes(seed32, t, net.kicks_per_tick, P_ * N)
+            return i_syn.at[lanes // N, lanes % N].add(jnp.int32(net.kick_fx))
         k = jax.random.fold_in(key, t)
-        # 1. drain FIFOs (spikes that arrive this tick)
-        arr_exc = state["exc_buf"][t % d_exc]          # (P, NE) from prev PE
-        arr_inh = state["inh_buf"][t % d_inh]          # (P, NI) same PE
-        n_fifo = arr_exc.sum(axis=1) + arr_inh.sum(axis=1)
-
-        # 2. DVFS: FIFO occupancy picks the PL before processing
-        pl = dvfs.select_pl(n_fifo)                    # (P,)
-
-        # 3. synaptic accumulation (event-driven integer MAC)
-        i_ff = jnp.einsum("pe,pen->pn", arr_exc, net.w_ff)
-        i_in = jnp.einsum("pi,pie->pe", arr_inh, net.w_inh)
-        i_syn = i_ff.at[:, :NE].add(i_in)
         noise = jax.random.normal(k, (P_, N))
-        i_syn = i_syn + jnp.round(noise * net.noise_sigma_fx).astype(jnp.int32)
+        return i_syn + jnp.round(noise * net.noise_sigma_fx).astype(jnp.int32)
+
+    def add_stim(i_syn, t):
         stim = jnp.where(
             (t < net.stim_ticks),
             jnp.zeros((P_, N), jnp.int32).at[0, :NE].set(net.stim_current_fx),
             jnp.zeros((P_, N), jnp.int32))
-        i_syn = i_syn + stim
+        return i_syn + stim
 
-        # 4. LIF update (bit-identical to the Pallas kernel)
-        v, ref, spk = lif_step_ref(state["v"], state["ref"], i_syn, **net.lif)
+    def finish(state, t, pl, n_fifo, syn_events, v, ref, spk, energy_rows,
+               extra_state):
+        """Shared tail: spike routing + record assembly."""
         spk_exc, spk_inh = spk[:, :NE], spk[:, NE:]
 
-        # 5. route spikes (multicast ring -> next PE FIFO; inh -> own FIFO)
+        # route spikes (multicast ring -> next PE FIFO; inh -> own FIFO)
         exc_out = exchange(spk_exc)                    # to PE i+1
-        exc_buf = state["exc_buf"].at[t % d_exc].set(exc_out)
-        inh_buf = state["inh_buf"].at[t % d_inh].set(spk_inh)
+        exc_buf = state["exc_buf"].at[t % d_exc].set(pack_spikes(exc_out, NE))
+        inh_buf = state["inh_buf"].at[t % d_inh].set(pack_spikes(spk_inh, NI))
 
-        # 6. accounting
-        syn_events = (jnp.einsum("pe,pe->p", arr_exc, net.deg_ff)
-                      + jnp.einsum("pi,pi->p", arr_inh, net.deg_inh))
-        e_dvfs = em.tick_energy(pl, N, syn_events, dvfs=True)
-        e_pl3 = em.tick_energy(jnp.full((P_,), 2), N, syn_events, dvfs=False)
-
-        new_state = {"v": v, "ref": ref, "exc_buf": exc_buf, "inh_buf": inh_buf}
+        new_state = {"v": v, "ref": ref, "exc_buf": exc_buf,
+                     "inh_buf": inh_buf, **extra_state}
         rec = {
             "pl": pl, "n_fifo": n_fifo, "syn_events": syn_events,
             # one multicast DNoC packet per spiking exc neuron — the NoC
@@ -164,31 +293,181 @@ def make_synfire_tick(net: SynfireNet, *, dvfs: DVFSController,
             "packets": spk_exc.astype(jnp.int32).sum(axis=1),
             "spikes_exc": spk_exc.astype(jnp.int8),
             "spikes_inh": spk_inh.astype(jnp.int8),
-            "e_dvfs_baseline": e_dvfs["baseline"],
-            "e_dvfs_neuron": e_dvfs["neuron"],
-            "e_dvfs_synapse": e_dvfs["synapse"],
-            "t_sp": e_dvfs["t_sp"],
-            "e_pl3_baseline": e_pl3["baseline"],
-            "e_pl3_neuron": e_pl3["neuron"],
-            "e_pl3_synapse": e_pl3["synapse"],
+            "e_dvfs_baseline": energy_rows[0],
+            "e_dvfs_neuron": energy_rows[1],
+            "e_dvfs_synapse": energy_rows[2],
+            "t_sp": energy_rows[3],
+            "e_pl3_baseline": energy_rows[4],
+            "e_pl3_neuron": energy_rows[5],
+            "e_pl3_synapse": energy_rows[6],
         }
         return new_state, rec
 
-    return tick
+    def energy_stack(pl, syn_events):
+        """Both energy accountings as a (7, ...) row stack."""
+        e_dvfs = em.tick_energy(pl, N, syn_events, dvfs=True)
+        e_pl3 = em.tick_energy(jnp.full(pl.shape, 2), N, syn_events,
+                               dvfs=False)
+        return jnp.stack([
+            e_dvfs["baseline"], e_dvfs["neuron"], e_dvfs["synapse"],
+            e_dvfs["t_sp"],
+            e_pl3["baseline"], e_pl3["neuron"], e_pl3["synapse"]])
+
+    def dense_tick(state, t):
+        # 1. drain FIFOs (spikes that arrive this tick)
+        we = state["exc_buf"][t % d_exc]               # (P, WE) packed
+        wi = state["inh_buf"][t % d_inh]               # (P, WI) packed
+        arr_exc = unpack_spikes(we, NE)                # (P, NE) from prev PE
+        arr_inh = unpack_spikes(wi, NI)                # (P, NI) same PE
+        n_fifo = popcount_words(we) + popcount_words(wi)
+
+        # 2. DVFS: FIFO occupancy picks the PL before processing
+        pl = dvfs.select_pl(n_fifo)                    # (P,)
+
+        # 3. synaptic accumulation (event-driven integer MAC)
+        i_ff = jnp.einsum("pe,pen->pn", arr_exc, net.w_ff)
+        i_in = jnp.einsum("pi,pie->pe", arr_inh, net.w_inh)
+        i_syn = add_stim(add_noise(i_ff.at[:, :NE].add(i_in), t), t)
+
+        # 4. LIF update (bit-identical to the Pallas kernel) + accounting
+        v, ref, spk = lif_step_ref(state["v"], state["ref"], i_syn,
+                                   **net.lif)
+        syn_events = (jnp.einsum("pe,pe->p", arr_exc, net.deg_ff)
+                      + jnp.einsum("pi,pi->p", arr_inh, net.deg_inh))
+        return finish(state, t, pl, n_fifo, syn_events, v, ref, spk,
+                      energy_stack(pl, syn_events), {})
+
+    # two-level compaction geometry (event tick only)
+    nc = -(-P_ // EVENT_CHUNK)                         # chunks of 64 PEs
+    kc = min(EVENT_MAX_CHUNKS, nc)
+    cap_eff = min(cap, kc * EVENT_CHUNK)
+    pad = nc * EVENT_CHUNK - P_
+    wide = P_ > 0xFFFF                                 # u16 tags else i32
+    tag_t = jnp.int32 if wide else jnp.uint16
+
+    def compact(src):
+        """Indices of up to ``cap_eff`` set bits of ``src`` (ascending;
+        sentinel P_ pads the tail), via two bounded sorts: active chunks
+        first, then per-PE tags on the candidate lanes only."""
+        m = src if pad == 0 else jnp.pad(src, (0, pad))
+        m = m.reshape(nc, EVENT_CHUNK)
+        c_any = m.any(axis=1)
+        ctags = jnp.where(c_any, jnp.arange(nc, dtype=tag_t), tag_t(nc))
+        cidx = jax.lax.sort(ctags)[:kc].astype(jnp.int32)
+        csafe = jnp.minimum(cidx, nc - 1)
+        sub = m[csafe] & (cidx < nc)[:, None]          # (kc, 64)
+        pos = (csafe[:, None] * EVENT_CHUNK
+               + jnp.arange(EVENT_CHUNK)[None, :]).astype(tag_t)
+        stags = jnp.where(sub, pos, tag_t(P_))
+        idx = jax.lax.sort(stags.ravel())[:cap_eff].astype(jnp.int32)
+        return idx, c_any.sum()
+
+    def event_tick(state, t):
+        # 1. drain FIFOs — popcount on the packed words gives n_fifo and
+        #    the arrival mask without unpacking
+        we = state["exc_buf"][t % d_exc]
+        wi = state["inh_buf"][t % d_inh]
+        n_fifo = popcount_words(we) + popcount_words(wi)
+        pl = dvfs.select_pl(n_fifo)
+        arr_exc = unpack_spikes(we, NE)
+        arr_inh = unpack_spikes(wi, NI)
+
+        # syn_events: fused dense elementwise — integer-exact match of
+        # the dense einsum, and cheaper than gathering deg tables
+        syn_events = ((arr_exc * net.deg_ff).sum(axis=1)
+                      + (arr_inh * net.deg_inh).sum(axis=1))
+
+        # 2. the input set: every PE receiving anything this tick —
+        #    spike arrivals, shot-noise kicks, the stimulus.  (A dense
+        #    Gaussian background is NOT input-sparse; it is added
+        #    densely after the cond, identically in both branches.)
+        src = n_fifo > 0
+        if shot:
+            lanes = shot_noise_lanes(seed32, t, net.kicks_per_tick, P_ * N)
+            src = src.at[lanes // N].set(True)
+        if net.stim_ticks > 0:
+            src = src.at[0].set(src[0] | (t < net.stim_ticks))
+        n_src = src.sum()
+        idx, n_chunks = compact(src)                   # (cap_eff,)
+        safe = jnp.minimum(idx, P_ - 1)
+        valid = idx < P_
+
+        def compressed(ops):
+            arr_e, arr_i = ops
+            m = valid[:, None]
+            ae = arr_e[safe] * m                       # (cap_eff, NE)
+            ai = arr_i[safe] * m                       # (cap_eff, NI)
+            # gather only the touched weight slabs
+            i_k = jnp.einsum("ke,ken->kn", ae, net.w_ff[safe])
+            i_k = i_k.at[:, :NE].add(
+                jnp.einsum("ki,kie->ke", ai, net.w_inh[safe]))
+            if shot:
+                # every kicked PE is in the input set, so searchsorted
+                # finds its exact lane in the sorted index buffer
+                kpos = jnp.searchsorted(idx, lanes // N)
+                i_k = i_k.at[jnp.minimum(kpos, cap_eff - 1),
+                             lanes % N].add(jnp.int32(net.kick_fx))
+            if net.stim_ticks > 0:
+                # PE 0 is forced into the set while stimulated, so it
+                # owns lane 0 of the sorted buffer exactly when present
+                hit0 = (t < net.stim_ticks) & (idx[0] == 0)
+                i_k = i_k.at[0, :NE].add(
+                    jnp.where(hit0, jnp.int32(net.stim_current_fx),
+                              jnp.int32(0)))
+            # ONE bounded scatter back to the dense current (sentinel
+            # lanes drop); skipped PEs keep the exact zero rows the
+            # dense einsum would compute for them
+            return jnp.zeros((P_, N), jnp.int32).at[idx].set(i_k,
+                                                             mode="drop")
+
+        def dense_path(ops):
+            arr_e, arr_i = ops
+            i_ff = jnp.einsum("pe,pen->pn", arr_e, net.w_ff)
+            i_syn = i_ff.at[:, :NE].add(
+                jnp.einsum("pi,pie->pe", arr_i, net.w_inh))
+            if shot:
+                i_syn = i_syn.at[lanes // N, lanes % N].add(
+                    jnp.int32(net.kick_fx))
+            if net.stim_ticks > 0:
+                i_syn = i_syn.at[0, :NE].add(
+                    jnp.where(t < net.stim_ticks,
+                              jnp.int32(net.stim_current_fx),
+                              jnp.int32(0)))
+            return i_syn
+
+        i_syn = jax.lax.cond((n_src <= cap_eff) & (n_chunks <= kc),
+                             compressed, dense_path, (arr_exc, arr_inh))
+        if not shot:
+            k = jax.random.fold_in(key, t)
+            noise = jax.random.normal(k, (P_, N))
+            i_syn = i_syn + jnp.round(
+                noise * net.noise_sigma_fx).astype(jnp.int32)
+
+        # 3. dense LIF + dense energy pricing: fused elementwise passes
+        #    over regular arrays — cheaper than compacting them on CPU
+        v, ref, spk = lif_step_ref(state["v"], state["ref"], i_syn,
+                                   **net.lif)
+        return finish(state, t, pl, n_fifo, syn_events, v, ref, spk,
+                      energy_stack(pl, syn_events), {})
+
+    return event_tick if event else dense_tick
 
 
-def simulate_synfire(net: SynfireNet, n_ticks: int, seed: int = 1):
+def simulate_synfire(net: SynfireNet, n_ticks: int, seed: int = 1,
+                     event: bool = False):
     """Returns per-tick records (all (T, P) unless noted):
 
     pl, n_fifo, syn_events, spikes_exc (T,P,200), spikes_inh (T,P,50),
-    plus both energy accountings (dvfs / only-PL3).
+    plus both energy accountings (dvfs / only-PL3).  ``event=True`` runs
+    the activity-compressed tick — records are bitwise identical.
     """
     sp = net.params
     dvfs = DVFSController(sp.l_th1, sp.l_th2)
     em = PEEnergyModel()
     tick = make_synfire_tick(net, dvfs=dvfs, em=em,
-                             key=jax.random.PRNGKey(seed))
-    _, recs = jax.lax.scan(tick, synfire_init_state(net), jnp.arange(n_ticks))
+                             key=jax.random.PRNGKey(seed), event=event)
+    init = synfire_init_state(net)
+    _, recs = jax.lax.scan(tick, init, jnp.arange(n_ticks))
     return recs
 
 

@@ -1,0 +1,6 @@
+from repro.kernels.event_gather.ops import (EVENT_GATHER_IMPLS,
+                                            active_source_set,
+                                            event_link_loads,
+                                            event_link_loads_gather,
+                                            event_link_loads_pallas)
+from repro.kernels.event_gather.ref import event_link_loads_ref

@@ -1,0 +1,51 @@
+"""Active-source link accumulation kernel (Pallas, TPU target).
+
+The event engine's NoC accounting is a segment reduction over the
+gathered CSR rows of the active sources.  Scatter-add has no native TPU
+tile shape (same constraint as ``repro.kernels.link_load``), so the
+kernel uses the one-hot matmul formulation: with the gathered entries
+flattened to ``(M, 1)`` link ids + per-entry weights, the grid walks the
+link space in 128-lane blocks and each step materializes the (M, 128)
+hit mask against its lane window,
+
+    loads[l] = sum_m  w[m] * [ids[m] == l]
+
+— a masked broadcast + lane reduction, all VPU-shaped.  M is
+O(cap * max_tree_links): bounded by the event buffer, independent of P.
+
+Validated on CPU with interpret=True against ref.py; exact on
+integer-valued weights (every partial sum is an integer below 2**24).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _onehot_accum_kernel(ids_ref, w_ref, o_ref):
+    base = pl.program_id(0) * LANES
+    lane = base + jax.lax.broadcasted_iota(jnp.int32, (1, LANES), 1)
+    ids = ids_ref[...]                                  # (M, 1) int32
+    w = w_ref[...]                                      # (M, 1) float32
+    hit = (ids == lane).astype(jnp.float32)             # (M, LANES)
+    o_ref[...] = (w * hit).sum(axis=0, keepdims=True)   # (1, LANES)
+
+
+def onehot_link_accum_pallas(ids, w, *, n_links: int, interpret=True):
+    """ids: (M,) int32 link ids (>= n_links = discard); w: (M,) float32
+    entry weights.  Returns (n_links,) float32 per-link sums."""
+    m = ids.shape[0]
+    blocks = -(-max(n_links, 1) // LANES)
+    out = pl.pallas_call(
+        _onehot_accum_kernel,
+        grid=(blocks,),
+        in_specs=[pl.BlockSpec((m, 1), lambda j: (0, 0)),
+                  pl.BlockSpec((m, 1), lambda j: (0, 0))],
+        out_specs=pl.BlockSpec((1, LANES), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((blocks, LANES), jnp.float32),
+        interpret=interpret,
+    )(ids.reshape(m, 1).astype(jnp.int32), w.reshape(m, 1))
+    return out.reshape(-1)[:n_links]

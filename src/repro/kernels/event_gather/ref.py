@@ -1,0 +1,34 @@
+"""Pure-jnp oracle of the active-source segment-gather (event-mode NoC).
+
+One tick of event-driven NoC accounting: instead of pushing the DENSE
+(P,) per-source packet vector through the incidence (dense einsum or
+column plan — ``repro.kernels.link_load``), the event engine hands over a
+bounded compacted index buffer ``idx`` of the sources active this tick
+(sentinel ``P`` marks unused lanes) and only their multicast-tree rows of
+the CSR incidence are touched:
+
+    loads[l] = sum_{k : idx[k] < P}  weights[idx[k]] * [l in tree(idx[k])]
+
+Rows come in the padded layout ``SparseIncidence.padded_rows`` (link ids
+right-padded with ``n_links``), so the gather is rectangular.  On
+integer-valued weights float32 accumulation is exact in any order, and a
+quiescent source contributes exact 0.0 — so as long as ``idx`` covers
+every source with a nonzero weight, this agrees BITWISE with the dense
+einsum over the full vector.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def event_link_loads_ref(idx, weights, rows_padded, n_links: int):
+    """idx: (cap,) active-source ids, sentinel P for unused lanes;
+    weights: (P,) per-source counts; rows_padded: (P, L) padded link ids.
+    Returns (n_links,) float32 per-link loads."""
+    P_ = weights.shape[-1]
+    safe = jnp.minimum(idx, P_ - 1)
+    w = jnp.where(idx < P_, weights[safe].astype(jnp.float32), 0.0)  # (cap,)
+    ids = rows_padded[safe]                                          # (cap, L)
+    loads = jnp.zeros(n_links + 1, jnp.float32)
+    loads = loads.at[ids].add(jnp.broadcast_to(w[:, None], ids.shape))
+    return loads[:n_links]

@@ -25,7 +25,9 @@ identical to the pre-plasticity engine.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.chip.graph import mac_dynamic_energy_j
 from repro.kernels.explog.ref import FX_ONE
@@ -67,6 +69,18 @@ def _slot_signal(rec: dict, key: str, slot_name: str):
             f"docstring)") from None
 
 
+def group_slots(slots) -> list:
+    """Batchable groups of learn slots: same kind, same (frozen, hashable)
+    rule, same weight shape.  Slot order inside a group — and group order
+    — follows program order, so record keys and energy accumulation stay
+    deterministic."""
+    groups: dict = {}
+    for s in slots:
+        groups.setdefault((s.kind, s.rule, s.n_pre, s.n_post),
+                          []).append(s)
+    return list(groups.values())
+
+
 def make_learn_step(program):
     """Per-tick learning update for ``program`` (traced in the scan).
 
@@ -74,42 +88,78 @@ def make_learn_step(program):
     ``rec_updates`` carries ``e_learn`` — the (P,) per-PE learning
     energy of this tick — plus one ``learn/<slot>/dw`` scalar per slot
     (mean |weight delta|, in weight units), the live update-magnitude
-    signal the telemetry probes and the Perfetto learn track consume."""
-    slots = program.learn_slots
+    signal the telemetry probes and the Perfetto learn track consume.
+
+    Same-shape slots sharing one rule are BATCHED: their weights/traces/
+    signals stack on a leading group axis and one vmapped rule update
+    advances the whole group — the trace cost per extra slot is a few
+    stack/slice eqns instead of a full rule unroll (the s16.15 exp
+    accelerator alone traces ~50 eqns), so programs with hundreds of
+    plastic projections stay compilable.  Per-slot state layout, record
+    keys and arithmetic are unchanged: stacking batches the identical
+    elementwise ops, so each slot's weights advance bit-exactly as in
+    the unrolled form."""
     P = program.n_pes
+    groups = group_slots(program.learn_slots)
+    # static scatter metadata per group: every slot's owning-PE ids and
+    # tile counts concatenate into ONE consolidated e_learn scatter
+    meta = []
+    for g in groups:
+        ids = np.concatenate([np.asarray(s.pe_ids, np.int64) for s in g])
+        counts = np.array([len(s.pe_ids) for s in g])
+        meta.append((jnp.asarray(ids), counts,
+                     jnp.asarray(counts, jnp.float32)))
 
     def step(lstate, rec):
         new = dict(lstate)
         e = jnp.zeros(P, jnp.float32)
         updates = {}
-        for s in slots:
-            st = lstate[s.name]
-            pre = _slot_signal(rec, f"learn/{s.name}/pre", s.name)
-            if s.kind == "pes":
-                err = _slot_signal(rec, f"learn/{s.name}/err", s.name)
-                tr = trace_step_fx(st["tr"], pre, s.rule.tau_ticks,
-                                   s.rule.impl)
-                act_hz = trace_to_hz(tr, s.rule.tau_ticks)
-                w = pes_step(st["w"], act_hz, err, s.rule, s.n_pre)
-                new[s.name] = {"w": w, "tr": tr}
+        for g, (ids, counts, lens) in zip(groups, meta):
+            s0 = g[0]
+            pre = jnp.stack([_slot_signal(rec, f"learn/{s.name}/pre",
+                                          s.name) for s in g])
+            w_old = jnp.stack([lstate[s.name]["w"] for s in g])
+            if s0.kind == "pes":
+                err = jnp.stack([_slot_signal(rec, f"learn/{s.name}/err",
+                                              s.name) for s in g])
+                # trace decay + rate filter are elementwise — the stacked
+                # call IS the batched update (one fx_exp per group)
+                tr = trace_step_fx(
+                    jnp.stack([lstate[s.name]["tr"] for s in g]), pre,
+                    s0.rule.tau_ticks, s0.rule.impl)
+                act_hz = trace_to_hz(tr, s0.rule.tau_ticks)
+                w = jax.vmap(lambda wi, ai, ei: pes_step(
+                    wi, ai, ei, s0.rule, s0.n_pre))(w_old, act_hz, err)
+                for i, s in enumerate(g):
+                    new[s.name] = {"w": w[i], "tr": tr[i]}
                 # event-driven: a zero-error tick dispatches no updates
-                active = jnp.any(err != 0).astype(jnp.float32)
-                macs = active * float(s.n_pre * s.n_post)
-                n_exp = float(s.n_pre)
-                dw = jnp.abs(w - st["w"]).mean()
+                active = jnp.any(err != 0, axis=-1).astype(jnp.float32)
+                macs = active * float(s0.n_pre * s0.n_post)       # (G,)
+                n_exp = float(s0.n_pre)
+                dw = jnp.abs(w - w_old).mean(axis=(1, 2))
             else:
-                post = _slot_signal(rec, f"learn/{s.name}/post", s.name)
-                w, ptr, qtr = stdp_step_fx(st["w"], st["pre_tr"],
-                                           st["post_tr"], pre, post, s.rule)
-                new[s.name] = {"w": w, "pre_tr": ptr, "post_tr": qtr}
-                macs = (pre.astype(jnp.float32).sum() * s.n_post
-                        + post.astype(jnp.float32).sum() * s.n_pre)
-                n_exp = float(s.n_pre + s.n_post)
-                dw = (jnp.abs(w - st["w"]).astype(jnp.float32).mean()
-                      / FX_ONE)
-            updates[f"learn/{s.name}/dw"] = dw
+                post = jnp.stack([_slot_signal(rec, f"learn/{s.name}/post",
+                                               s.name) for s in g])
+                ptr0 = jnp.stack([lstate[s.name]["pre_tr"] for s in g])
+                qtr0 = jnp.stack([lstate[s.name]["post_tr"] for s in g])
+                w, ptr, qtr = jax.vmap(
+                    lambda wi, pi, qi, pri, poi: stdp_step_fx(
+                        wi, pi, qi, pri, poi, s0.rule))(
+                    w_old, ptr0, qtr0, pre, post)
+                for i, s in enumerate(g):
+                    new[s.name] = {"w": w[i], "pre_tr": ptr[i],
+                                   "post_tr": qtr[i]}
+                macs = (pre.astype(jnp.float32).sum(axis=-1) * s0.n_post
+                        + post.astype(jnp.float32).sum(axis=-1) * s0.n_pre)
+                n_exp = float(s0.n_pre + s0.n_post)
+                dw = (jnp.abs(w - w_old).astype(jnp.float32).mean(
+                    axis=(1, 2)) / FX_ONE)
+            for i, s in enumerate(g):
+                updates[f"learn/{s.name}/dw"] = dw[i]
             e_slot = mac_dynamic_energy_j(macs) + exp_op_energy_j(n_exp)
-            e = e.at[jnp.asarray(s.pe_ids)].add(e_slot / len(s.pe_ids))
+            e = e.at[ids].add(jnp.repeat(
+                e_slot / lens, counts,
+                total_repeat_length=int(counts.sum())))
         updates["e_learn"] = e
         return new, updates
 

@@ -90,6 +90,22 @@ def _energy_probes(program, stride=None):
             ProbeSpec("e_noc_sum", "e_noc", "sum", stride))
 
 
+def _activity_probes(program, stride=None):
+    """Event-sparsity telemetry: active-PE count, active-source fraction
+    and per-tier touched-link counts — the signals the event execution
+    mode compresses on.  Both exec modes emit these records identically,
+    so the probes read the same whichever mode ran."""
+    out = [ProbeSpec("active_pe_mean", "active_sources", "mean", stride),
+           ProbeSpec("active_frac_mean", "active_frac", "mean", stride),
+           ProbeSpec("touched_links_mean", "touched_links", "mean", stride)]
+    # per-tier keys mirror the engine: empty tiers (1x1 board) emit none
+    for tier, m in program.noc.tier_masks().items():
+        if np.asarray(m).any():
+            out.append(ProbeSpec(f"touched_links_{tier}_mean",
+                                 f"touched_links_{tier}", "mean", stride))
+    return tuple(out)
+
+
 def _learn_probes(program, stride=None):
     """Per-slot learn signals: per-PE learning energy + per-slot mean
     |dw| (the engine reports both for every plastic program)."""
@@ -104,6 +120,7 @@ def _learn_probes(program, stride=None):
 PROBE_REGISTRY = {
     "link_flits": _link_flit_probes,
     "pe_packets": _pe_activity_probes,
+    "activity": _activity_probes,
     "dvfs": _dvfs_probes,
     "energy": _energy_probes,
     "learn": _learn_probes,

@@ -61,7 +61,7 @@ class FleetEngine:
                  capacity: Optional[int] = None, probes=(),
                  probe_ticks: int = 1024, board=None, refine: bool = True,
                  ckpt_dir=None, seed: int = 1, keep_outputs: bool = True,
-                 max_rounds: int = 100_000):
+                 max_rounds: int = 100_000, exec_mode: str = "auto"):
         self.scenario = scenario
         self.Tc = int(round_ticks)
         self.dvfs = dvfs or QueueDVFS()
@@ -75,7 +75,14 @@ class FleetEngine:
             self.program = compile_board(graph, board, refine=refine)
         else:
             self.program = compile_graph(graph)
-        self.sim = ChipSim(self.program)
+        # exec_mode reaches the vmapped stepper unchanged ("auto" | "dense"
+        # | "event"): per-tick records are bitwise-identical either way, so
+        # serving results don't depend on the mode.  Note the compressed
+        # tick's overflow fallback is a lax.cond, and under vmap XLA
+        # evaluates BOTH branches — a vmapped event fleet is correct but
+        # only saves the work the compressed branch itself skips; the
+        # single-instance speedup story lives in ChipSim.run.
+        self.sim = ChipSim(self.program, exec_mode=exec_mode)
         self._template, self._tick = self.sim.make_stepper(seed=seed)
 
         self.capacity = int(capacity or max(self.dvfs.batch_levels))

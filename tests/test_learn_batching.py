@@ -1,0 +1,129 @@
+"""Same-shape ``LearnSlot`` batching in ``repro.learn.engine``.
+
+The per-slot Python unroll traced a full rule update per plastic
+projection — the s16.15 exp-accelerator chain alone is ~50 eqns — and
+stalled compilation past a few dozen slots.  The batched engine stacks
+same-(kind, rule, shape) groups and advances each with ONE vmapped rule
+step, so an extra slot costs only its stack/unstack bookkeeping.  Pinned
+here:
+
+* the ≥64-slot compile-time regression gate: the traced step's marginal
+  eqn count per extra slot stays far below a rule unroll — this test
+  FAILS if per-slot unrolling ever returns;
+* grouping is by (kind, rule, shape) in program order;
+* batching is semantics-free: a slot advanced inside a 6-slot group
+  carries bit-identical weights/traces/dw to the same slot advanced as
+  a group of one, and the consolidated ``e_learn`` scatter matches the
+  per-slot sum.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.learn import PES, STDP
+from repro.learn.engine import (group_slots, init_learn_state,
+                                make_learn_step)
+from repro.learn.lower import LearnSlot
+
+N_PES = 8
+
+
+class FakeProgram:
+    def __init__(self, slots, n_pes=N_PES):
+        self.learn_slots = slots
+        self.n_pes = n_pes
+
+
+def pes_slots(n, n_pre=16, n_post=2):
+    rule = PES(learning_rate=1e-4)
+    return [LearnSlot(name=f"s{i}", kind="pes", rule=rule, src=f"a{i}",
+                      dst=f"b{i}", n_pre=n_pre, n_post=n_post,
+                      pe_ids=(i % N_PES,)) for i in range(n)]
+
+
+def stdp_slots(n, n_pre=12, n_post=4):
+    rule = STDP()
+    return [LearnSlot(name=f"t{i}", kind="stdp", rule=rule, src=f"a{i}",
+                      dst=f"b{i}", n_pre=n_pre, n_post=n_post,
+                      pe_ids=(i % N_PES,)) for i in range(n)]
+
+
+def rec_for(slots, seed=0):
+    rng = np.random.default_rng(seed)
+    rec = {}
+    for s in slots:
+        rec[f"learn/{s.name}/pre"] = jnp.asarray(
+            (rng.random(s.n_pre) < 0.3).astype(np.float32))
+        if s.kind == "pes":
+            rec[f"learn/{s.name}/err"] = jnp.asarray(
+                rng.standard_normal(s.n_post).astype(np.float32))
+        else:
+            rec[f"learn/{s.name}/post"] = jnp.asarray(
+                (rng.random(s.n_post) < 0.3).astype(np.float32))
+    return rec
+
+
+def traced_eqns(slots):
+    prog = FakeProgram(slots)
+    step = make_learn_step(prog)
+    rec = rec_for(slots)
+    jaxpr = jax.make_jaxpr(lambda st: step(st, rec))(init_learn_state(prog))
+    return len(jaxpr.jaxpr.eqns)
+
+
+# ------------------------------------------------ compile-time regression
+
+@pytest.mark.parametrize("mk", [pes_slots, stdp_slots],
+                         ids=["pes", "stdp"])
+def test_64_slot_group_has_no_per_slot_rule_unroll(mk):
+    """Marginal trace cost per extra same-shape slot must stay at
+    stack/slice bookkeeping scale (~10-13 eqns measured).  A per-slot
+    rule unroll costs >= ~50 eqns/slot (one fx_exp chain each), so the
+    20-eqn bound trips long before the old behavior is back."""
+    e8, e64 = traced_eqns(mk(8)), traced_eqns(mk(64))
+    per_slot = (e64 - e8) / 56
+    assert per_slot <= 20, (e8, e64, per_slot)
+
+
+def test_grouping_by_kind_rule_and_shape_in_program_order():
+    a = pes_slots(3)
+    b = stdp_slots(2)
+    c = pes_slots(2, n_pre=5)                    # different shape
+    d = [LearnSlot(name="lr", kind="pes", rule=PES(learning_rate=9e-9),
+                   src="x", dst="y", n_pre=16, n_post=2, pe_ids=(0,))]
+    groups = group_slots(a + b + c + d)
+    names = [[s.name for s in g] for g in groups]
+    assert names == [[s.name for s in a], [s.name for s in b],
+                     [s.name for s in c], ["lr"]]
+
+
+# ----------------------------------------------------- bitwise semantics
+
+@pytest.mark.parametrize("mk", [pes_slots, stdp_slots],
+                         ids=["pes", "stdp"])
+def test_grouped_update_bitwise_matches_singleton_groups(mk):
+    slots = mk(6)
+    rec = rec_for(slots, seed=3)
+    prog = FakeProgram(slots)
+    state = init_learn_state(prog)
+    full_state, full_upd = make_learn_step(prog)(state, rec)
+
+    e_sum = np.zeros(N_PES, np.float64)
+    for s in slots:
+        solo = FakeProgram([s])
+        s_state, s_upd = make_learn_step(solo)(
+            {s.name: state[s.name]}, rec)
+        for k in s_state[s.name]:
+            np.testing.assert_array_equal(
+                np.asarray(full_state[s.name][k]),
+                np.asarray(s_state[s.name][k]), err_msg=f"{s.name}/{k}")
+        np.testing.assert_array_equal(
+            np.asarray(full_upd[f"learn/{s.name}/dw"]),
+            np.asarray(s_upd[f"learn/{s.name}/dw"]))
+        e_sum += np.asarray(s_upd["e_learn"], np.float64)
+    # one consolidated scatter vs per-slot scatters: same energy up to
+    # float summation order
+    np.testing.assert_allclose(np.asarray(full_upd["e_learn"]), e_sum,
+                               rtol=1e-6, atol=0)
