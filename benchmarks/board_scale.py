@@ -33,6 +33,7 @@ from repro.chip.chip import ChipSim, chip_power_table
 from repro.chip.workloads import (dnn_board_graph, hybrid_farm_board_graph,
                                   synfire_board_graph)
 from repro.obs import PhaseTimers, record_link_profile
+from repro.routeopt import optimize_routes
 
 # per-core neuron counts scaled down from Table II so a 1536-PE ring's
 # weight tensors stay in laptop memory (same scaling as chip_scale.py)
@@ -100,12 +101,58 @@ def bench_board(cls: str, board: BoardSpec, n_ticks: int = 64,
     return out
 
 
+def bench_board_opt(cls: str, board: BoardSpec, n_ticks: int = 64,
+                    opt_iters: int = 4,
+                    compile_budget_s: float | None = None) -> dict:
+    """The optimized twin of a ``bench_board`` row: run the
+    profile-guided route/place loop (``repro.routeopt``) on the same
+    (class, board) pair and emit a ``..._opt`` row carrying both sides
+    — optimized peak/mean per tier next to the measured baseline — plus
+    the per-iteration trajectory for the JSON artifact.  The
+    optimizer's wall-clock budget is the same ``--budget-s`` the plain
+    compile is held to (equal compile budget, the PR 9 gate)."""
+    tm = PhaseTimers()
+    with tm.phase("build"):
+        graph = BUILDERS[cls](board)
+    with tm.phase("optimize"):
+        res = optimize_routes(graph, board, n_ticks=n_ticks,
+                              max_iters=opt_iters,
+                              budget_s=compile_budget_s)
+    prog = res.program
+    sim = ChipSim(prog)
+    runner = jax.jit(lambda: sim.run(n_ticks))
+    with tm.phase("first_tick_jit"):
+        jax.block_until_ready(runner())
+    tick_us = time_call(runner, warmup=0, iters=3) / n_ticks
+    tm.record("steady_tick", tick_us * 1e-6)
+
+    base, opt = res.baseline, res.profile
+    name = (f"board_{cls}_{board.chips_x}x{board.chips_y}chips_"
+            f"{prog.n_pes}pe_opt")
+    emit(name, tick_us,
+         f"chips={board.n_chips};pes={prog.n_pes};"
+         f"ports={prog.board.ports_per_edge};"
+         f"iters={res.iterations};converged={int(res.converged)};"
+         f"optimize_s={tm['optimize']:.3f};"
+         f"peak_xlink_flits={opt.peak_xlink:.0f};"
+         f"base_peak_xlink_flits={base.peak_xlink:.0f};"
+         f"mean_xlink_flits={opt.mean_xlink:.4f};"
+         f"base_mean_xlink_flits={base.mean_xlink:.4f};"
+         f"peak_onchip_flits={opt.peak_onchip:.0f};"
+         f"base_peak_onchip_flits={base.peak_onchip:.0f};"
+         f"improvement={res.improvement:.4f}")
+    return {"name": name, "timers": tm.asdict(),
+            "trajectory": res.trajectory}
+
+
 def main(boards=("1x1", "2x2", "4x6", "4x12"), chip: str = "4x2",
          classes=("hybrid", "synfire", "dnn"), n_ticks: int = 64,
          compile_budget_s: float | None = None,
-         profile_links: bool = False) -> dict:
+         profile_links: bool = False, route_opt: bool = False,
+         opt_iters: int = 4) -> dict:
     link_profiles: dict = {}
     phase_timers: dict = {}
+    route_opt_traj: dict = {}
     for cls in classes:
         for i, b in enumerate(boards):
             spec = BoardSpec.parse(b, chip=chip)
@@ -117,7 +164,14 @@ def main(boards=("1x1", "2x2", "4x6", "4x12"), chip: str = "4x2",
             phase_timers[row["name"]] = row["timers"]
             if row["link_profile"] is not None:
                 link_profiles[row["name"]] = row["link_profile"]
-    return {"link_profiles": link_profiles, "phase_timers": phase_timers}
+            if route_opt and spec.n_chips > 1:
+                orow = bench_board_opt(cls, spec, n_ticks=n_ticks,
+                                       opt_iters=opt_iters,
+                                       compile_budget_s=compile_budget_s)
+                phase_timers[orow["name"]] = orow["timers"]
+                route_opt_traj[orow["name"]] = orow["trajectory"]
+    return {"link_profiles": link_profiles, "phase_timers": phase_timers,
+            "route_opt": route_opt_traj}
 
 
 if __name__ == "__main__":
@@ -133,6 +187,11 @@ if __name__ == "__main__":
                     help="fail if any partition+compile exceeds this")
     ap.add_argument("--profile-links", action="store_true",
                     help="record per-link peak/mean load profiles")
+    ap.add_argument("--route-opt", action="store_true",
+                    help="pair each multi-chip row with a profile-guided "
+                         "route/place-optimized twin (repro.routeopt)")
+    ap.add_argument("--opt-iters", type=int, default=4,
+                    help="max optimizer iterations per --route-opt row")
     ap.add_argument("--json", default=None, metavar="PATH")
     args = ap.parse_args()
 
@@ -140,7 +199,8 @@ if __name__ == "__main__":
     extras = main(boards=tuple(args.boards.split(",")), chip=args.chip,
                   classes=tuple(args.classes.split(",")),
                   n_ticks=args.ticks, compile_budget_s=args.budget_s,
-                  profile_links=args.profile_links)
+                  profile_links=args.profile_links,
+                  route_opt=args.route_opt, opt_iters=args.opt_iters)
 
     if args.json:
         from benchmarks.common import RESULTS
@@ -148,4 +208,5 @@ if __name__ == "__main__":
         write_bench_json(args.json, RESULTS,
                          link_profiles=extras["link_profiles"],
                          timers=extras["phase_timers"],
-                         config=vars(args))
+                         config=vars(args),
+                         route_opt=extras["route_opt"])

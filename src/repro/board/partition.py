@@ -46,16 +46,24 @@ class Partition:
         return np.array([len(p) for p in self.chip_pops])
 
 
-def _proj_weights(graph: NetGraph, payload_bits: int) -> list:
+def _proj_weights(graph: NetGraph, payload_bits: int,
+                  rates: dict | None = None) -> list:
     """(src, dst, flit-weighted traffic proxy) per projection: packets
     per source tile weigh their flit footprint (the engine's
     ``packet_flits`` formula over the board's flit payload size), every
-    src tile multicasts to every dst tile."""
+    src tile multicasts to every dst tile.
+
+    ``rates`` optionally replaces the static every-tile-fires-every-tick
+    estimate with MEASURED packets/tick summed over the source
+    population's tiles (``repro.routeopt.profile`` supplies it from the
+    in-scan probes); populations without a measurement keep the static
+    ``s.n_tiles`` proxy."""
     out = []
     for pr in graph.projections:
         flits = max(1, -(-pr.bits_per_packet // payload_bits))
         s, d = graph.population(pr.src), graph.population(pr.dst)
-        out.append((pr.src, pr.dst, float(flits * s.n_tiles * d.n_tiles)))
+        rate = (rates or {}).get(pr.src, float(s.n_tiles))
+        out.append((pr.src, pr.dst, float(flits * rate * d.n_tiles)))
     return out
 
 
@@ -80,9 +88,15 @@ def _fits(pops, extra, mesh: MeshSpec) -> bool:
     return assign_slots(pops + [extra], mesh.pes_per_qpe)[1] <= mesh.n_pes
 
 
-def partition(graph: NetGraph, board: BoardSpec,
-              refine: bool = True, max_passes: int = 2) -> Partition:
+def partition(graph: NetGraph, board: BoardSpec, refine: bool = True,
+              max_passes: int = 2, rates: dict | None = None) -> Partition:
     """Assign each population to a chip (see module docstring).
+
+    ``rates`` re-weights the min-cut refinement with measured per-
+    population packet rates instead of the static flit estimate (see
+    ``_proj_weights``); the greedy fill is rate-independent, so
+    ``rates=None`` and any measurement agree bit-for-bit when
+    refinement is off.
 
     Raises ``ValueError`` with the offending population / capacity totals
     when the graph cannot fit the board.
@@ -122,7 +136,7 @@ def partition(graph: NetGraph, board: BoardSpec,
     # 2. min-cut refinement: move populations toward their neighbors.
     # Only a move's incident edges change the cut, so each candidate is
     # scored in O(degree), not O(n_projections).
-    weights = _proj_weights(graph, board.noc.payload_bits)
+    weights = _proj_weights(graph, board.noc.payload_bits, rates)
     if refine and board.n_chips > 1 and weights:
         order = {p.name: i for i, p in enumerate(graph.populations)}
         incident: dict = {p.name: [] for p in graph.populations}

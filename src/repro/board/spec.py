@@ -61,6 +61,20 @@ class BoardSpec:
     chip: MeshSpec = field(default_factory=lambda: MeshSpec(2, 2))
     noc: NocSpec = field(default_factory=NocSpec)
     xlink: NocSpec = field(default_factory=xlink_spec)
+    # parallel SerDes bridges per chip edge: 1 (the historical mid-edge
+    # port) keeps every link id bit-identical to the pre-multi-port
+    # boards; >= 2 lets the profile-guided optimizer (repro.routeopt)
+    # spread chip-to-chip traffic across border ports
+    ports_per_edge: int = 1
+
+    def __post_init__(self):
+        k = self.ports_per_edge
+        lim = min(self.chip.width, self.chip.height)
+        if not 1 <= k <= lim:
+            raise ValueError(
+                f"ports_per_edge={k} out of range for a "
+                f"{self.chip.width}x{self.chip.height} chip mesh; each "
+                f"edge can host 1..{lim} distinct border port QPEs")
 
     @property
     def n_chips(self) -> int:
@@ -76,12 +90,26 @@ class BoardSpec:
     def chip_index(self, cx: int, cy: int) -> int:
         return cy * self.chips_x + cx
 
-    def port(self, d: str) -> tuple[int, int]:
-        """Within-chip QPE coordinate of the border port QPE serving the
-        chip-to-chip link in direction ``d`` (mid-edge, fixed per board)."""
+    def port(self, d: str, j: int = 0) -> tuple[int, int]:
+        """Within-chip QPE coordinate of border port ``j`` serving the
+        chip-to-chip links in direction ``d`` (j=0 is the historical
+        mid-edge port)."""
+        return self.ports(d)[j]
+
+    def ports(self, d: str) -> list:
+        """All ``ports_per_edge`` border port QPE coordinates on edge
+        ``d``, evenly spread along it.  Port j on edge ``d`` bridges to
+        port j on the neighbor's ``OPPOSITE[d]`` edge (the spread
+        formula depends only on the perpendicular extent, so paired
+        ports face each other).  ``ports_per_edge == 1`` reproduces the
+        historical mid-edge ``port(d)`` exactly."""
         W, H = self.chip.width, self.chip.height
-        return {EAST: (W - 1, H // 2), WEST: (0, H // 2),
-                NORTH: (W // 2, H - 1), SOUTH: (W // 2, 0)}[d]
+        k = self.ports_per_edge
+        if d in (EAST, WEST):
+            x = W - 1 if d == EAST else 0
+            return [(x, (j + 1) * H // (k + 1)) for j in range(k)]
+        y = H - 1 if d == NORTH else 0
+        return [((j + 1) * W // (k + 1), y) for j in range(k)]
 
     @staticmethod
     def parse(board: str, chip: str = "2x2") -> "BoardSpec":
@@ -112,27 +140,32 @@ class BoardNoc(NocAccounting):
         self.links_per_chip = self.chip_noc.n_links
         self.n_onchip_links = self.board.n_chips * self.links_per_chip
         # directed chip-to-chip links, enumerated like MeshNoc's mesh
-        # links: (chip index, outgoing direction) -> global xlink ordinal
+        # links: (chip index, outgoing direction, port j) -> global xlink
+        # ordinal.  ports_per_edge == 1 reproduces the single-port
+        # enumeration id-for-id (the j loop collapses to the old order).
         self.xlink_index: dict = {}
         self.xlinks: list = []
         bx, by = self.board.chips_x, self.board.chips_y
+        k = self.board.ports_per_edge
         for cy in range(by):
             for cx in range(bx):
                 if cx + 1 < bx:
-                    self._add_xlink((cx, cy), EAST)
-                    self._add_xlink((cx + 1, cy), WEST)
+                    for j in range(k):
+                        self._add_xlink((cx, cy), EAST, j)
+                        self._add_xlink((cx + 1, cy), WEST, j)
                 if cy + 1 < by:
-                    self._add_xlink((cx, cy), NORTH)
-                    self._add_xlink((cx, cy + 1), SOUTH)
+                    for j in range(k):
+                        self._add_xlink((cx, cy), NORTH, j)
+                        self._add_xlink((cx, cy + 1), SOUTH, j)
         self.n_xchip_links = len(self.xlinks)
         mask = np.zeros(self.n_links, np.float32)
         mask[self.n_onchip_links:] = 1.0
         self.xlink_mask = mask
 
-    def _add_xlink(self, chip_xy, d):
+    def _add_xlink(self, chip_xy, d, j):
         c = self.board.chip_index(*chip_xy)
-        self.xlink_index[(c, d)] = len(self.xlinks)
-        self.xlinks.append((c, d))
+        self.xlink_index[(c, d, j)] = len(self.xlinks)
+        self.xlinks.append((c, d, j))
 
     @property
     def n_links(self) -> int:
@@ -142,10 +175,10 @@ class BoardNoc(NocAccounting):
         """Global id of chip c's first on-chip link."""
         return c * self.links_per_chip
 
-    def xlink_id(self, c: int, d: str) -> int:
+    def xlink_id(self, c: int, d: str, j: int = 0) -> int:
         """Global link id of chip c's outgoing chip-to-chip link in
-        direction d."""
-        return self.n_onchip_links + self.xlink_index[(c, d)]
+        direction d through border port j."""
+        return self.n_onchip_links + self.xlink_index[(c, d, j)]
 
     def link_endpoints(self, link_id: int):
         """((chip, (x, y)), (chip, (x, y))) endpoints of any global link
@@ -154,11 +187,12 @@ class BoardNoc(NocAccounting):
             c, local = divmod(link_id, self.links_per_chip)
             a, b = self.chip_noc.links[local]
             return (c, a), (c, b)
-        c, d = self.xlinks[link_id - self.n_onchip_links]
+        c, d, j = self.xlinks[link_id - self.n_onchip_links]
         cx, cy = self.board.chip_coord(c)
         dx, dy = DIR_STEP[d]
         nbr = self.board.chip_index(cx + dx, cy + dy)
-        return (c, self.board.port(d)), (nbr, self.board.port(OPPOSITE[d]))
+        return ((c, self.board.port(d, j)),
+                (nbr, self.board.port(OPPOSITE[d], j)))
 
     def tier_masks(self) -> dict:
         """Two-tier twin of ``NocAccounting.tier_masks``: the cheap

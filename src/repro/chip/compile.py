@@ -142,8 +142,17 @@ def source_packet_classes(graph: NetGraph) -> dict:
 
 
 def compile(graph: NetGraph, mesh: MeshSpec | None = None,
-            pe: PESpec = PESpec()) -> ChipProgram:          # noqa: A001
+            pe: PESpec = PESpec(),
+            orientations: dict | None = None) -> ChipProgram:  # noqa: A001
     """Compile ``graph`` onto ``mesh`` (auto-sized when None).
+
+    ``orientations`` optionally maps population name -> tree orientation
+    ("xy"/"yx", see ``repro.core.noc.ORIENTATIONS``); unlisted
+    populations — and the default None — keep the historical X-first
+    trees, bit-identical to the pre-orientation compiler.  The
+    profile-guided optimizer (``repro.routeopt``) is the intended
+    caller; routing orientation never changes neuron-state records,
+    only NoC link accounting.
 
     Raises ``ValueError`` up front — naming the population at fault — when
     a tile exceeds the PE SRAM or the graph exceeds the mesh capacity.
@@ -205,11 +214,14 @@ def compile(graph: NetGraph, mesh: MeshSpec | None = None,
         dst_slices[pr.src].append(pe_slices[pr.dst])
     empty = np.empty((0, 2), np.int64)
     dst_lists = []
+    orients = []
     for pop in graph.populations:
         sls = dst_slices[pop.name]
         dst_xy = np.concatenate([coords[sl] for sl in sls]) if sls else empty
         dst_lists.extend([dst_xy] * pop.n_tiles)
-    sinc = noc.sparse_incidence(coords, dst_lists)
+        o = (orientations or {}).get(pop.name, "xy")
+        orients.extend([o] * pop.n_tiles)
+    sinc = noc.sparse_incidence(coords, dst_lists, orientations=orients)
 
     sram = np.zeros(n_pes, np.int64)
     for pop in graph.populations:

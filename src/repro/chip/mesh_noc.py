@@ -30,7 +30,7 @@ from dataclasses import dataclass, field
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.noc import NocSpec, xy_route
+from repro.core.noc import NocSpec, ORIENTATIONS, build_tree
 from repro.kernels.event_gather.ops import (EVENT_GATHER_IMPLS,
                                             active_source_set,
                                             event_link_loads)
@@ -476,70 +476,100 @@ class MeshNoc(NocAccounting):
 
     # -- incidence construction (setup time, numpy) -----------------------
 
-    def tree_links(self, src: tuple, dsts) -> set:
-        """Distinct links of the X/Y multicast tree src -> dsts (shared
-        prefixes paid once — the router duplicates at branch points).
+    def tree_links(self, src: tuple, dsts, orientation: str = "xy") -> set:
+        """Distinct links of the dimension-ordered multicast tree
+        src -> dsts (shared prefixes paid once — the router duplicates at
+        branch points).
 
-        Reference implementation: walks ``xy_route`` per destination.  The
-        vectorized ``tree_link_ids`` is validated against it in tests."""
-        out: set = set()
-        for d in dsts:
-            if d != src:
-                out.update(xy_route(src, d))
-        return out
+        Reference implementation: the shared ``repro.core.noc.build_tree``
+        walk.  The vectorized ``tree_link_ids`` is validated against it
+        in tests."""
+        return set(build_tree(src, dsts, orientation))
 
-    def tree_link_ids(self, src, dst_xy: np.ndarray) -> np.ndarray:
-        """Distinct link ids of the X/Y multicast tree src -> dst coords,
-        derived arithmetically from the destination coordinate array.
+    def tree_link_ids(self, src, dst_xy: np.ndarray,
+                      orientation: str = "xy") -> np.ndarray:
+        """Distinct link ids of the dimension-ordered multicast tree
+        src -> dst coords, derived arithmetically from the destination
+        coordinate array.
 
-        X-first routing makes the tree one horizontal trunk on the source
-        row (east to the farthest east destination column, west to the
-        farthest west) plus, per destination column, one vertical run to
-        the farthest row above/below — no per-destination route walk.
+        Trunk-first routing makes the tree one trunk through the source
+        (along the first-routed dimension, out to the farthest
+        destination on either side) plus, per destination lane, one
+        perpendicular run to the farthest destination — no
+        per-destination route walk.  ``orientation`` picks the trunk
+        dimension: "xy" (X first, the historical default) or "yx" — the
+        latter is the same arithmetic over the transposed link-id
+        tables, so both orientations share ONE implementation.
         """
         d = np.asarray(dst_xy, np.int64).reshape(-1, 2)
         if not d.size:
             return np.empty(0, np.int32)
-        sx, sy = int(src[0]), int(src[1])
-        dx, dy = d[:, 0], d[:, 1]
+        if orientation == "yx":
+            # transposed space: u = y, v = x; +u links are north, +v east
+            return self._oriented_tree_ids(
+                (int(src[1]), int(src[0])), d[:, ::-1],
+                self._id_n.T, self._id_s.T, self._id_e.T, self._id_w.T,
+                self.mesh.height)
+        if orientation != "xy":
+            raise ValueError(f"unknown orientation {orientation!r}; "
+                             f"expected one of {ORIENTATIONS}")
+        return self._oriented_tree_ids(
+            (int(src[0]), int(src[1])), d,
+            self._id_e, self._id_w, self._id_n, self._id_s,
+            self.mesh.width)
+
+    def _oriented_tree_ids(self, src, d, id_pos, id_neg, id_up, id_dn,
+                           width) -> np.ndarray:
+        """Trunk + branch-run construction in an orientation-agnostic
+        frame: (u, v) coordinates where u is the trunk dimension, with
+        ``id_pos``/``id_neg`` the +u/-u link tables, ``id_up``/``id_dn``
+        the +v/-v tables (transposed views for "yx") and ``width`` the
+        u-extent of the mesh."""
+        su, sv = src
+        du, dv = d[:, 0], d[:, 1]
         parts = []
-        xmax, xmin = int(dx.max()), int(dx.min())
-        if xmax > sx:
-            parts.append(self._id_e[sx:xmax, sy])
-        if xmin < sx:
-            parts.append(self._id_w[xmin:sx, sy])
-        up = dy > sy
+        umax, umin = int(du.max()), int(du.min())
+        if umax > su:
+            parts.append(id_pos[su:umax, sv])
+        if umin < su:
+            parts.append(id_neg[umin:su, sv])
+        up = dv > sv
         if up.any():
-            top = np.full(self.mesh.width, sy, np.int64)
-            np.maximum.at(top, dx[up], dy[up])
-            cols = np.flatnonzero(top > sy)
-            lens = top[cols] - sy
-            ys = _concat_ranges(np.full(cols.size, sy, np.int64), lens)
-            parts.append(self._id_n[np.repeat(cols, lens), ys])
-        dn = dy < sy
+            top = np.full(width, sv, np.int64)
+            np.maximum.at(top, du[up], dv[up])
+            cols = np.flatnonzero(top > sv)
+            lens = top[cols] - sv
+            vs = _concat_ranges(np.full(cols.size, sv, np.int64), lens)
+            parts.append(id_up[np.repeat(cols, lens), vs])
+        dn = dv < sv
         if dn.any():
-            bot = np.full(self.mesh.width, sy, np.int64)
-            np.minimum.at(bot, dx[dn], dy[dn])
-            cols = np.flatnonzero(bot < sy)
-            lens = sy - bot[cols]
-            ys = _concat_ranges(bot[cols], lens)
-            parts.append(self._id_s[np.repeat(cols, lens), ys])
+            bot = np.full(width, sv, np.int64)
+            np.minimum.at(bot, du[dn], dv[dn])
+            cols = np.flatnonzero(bot < sv)
+            lens = sv - bot[cols]
+            vs = _concat_ranges(bot[cols], lens)
+            parts.append(id_dn[np.repeat(cols, lens), vs])
         if not parts:
             return np.empty(0, np.int32)
         return np.concatenate(parts).astype(np.int32)
 
-    def sparse_incidence(self, src_coords, dst_coord_lists) -> SparseIncidence:
+    def sparse_incidence(self, src_coords, dst_coord_lists,
+                         orientations=None) -> SparseIncidence:
         """CSR incidence + per-source tree hop depths in one pass.
 
         ``dst_coord_lists[i]`` is source i's destination coordinate array
         (anything ``np.asarray`` can shape to (n, 2); duplicates and the
-        source's own coordinate are harmless)."""
+        source's own coordinate are harmless).  ``orientations`` is an
+        optional per-source sequence of tree orientations ("xy"/"yx");
+        None keeps every tree X-first — bit-identical to the
+        pre-orientation compiler."""
         src = np.asarray(src_coords, np.int64).reshape(-1, 2)
         rows = []
         hops = np.zeros(len(src), np.int32)
         for i, (s, d) in enumerate(zip(src, dst_coord_lists)):
             d = np.asarray(d, np.int64).reshape(-1, 2)
-            rows.append(self.tree_link_ids(s, d))
+            o = orientations[i] if orientations is not None else "xy"
+            rows.append(self.tree_link_ids(s, d, orientation=o))
             if d.size:
                 hops[i] = int(np.abs(d - s).sum(axis=1).max())
         return SparseIncidence.from_rows(rows, self.n_links, hops)

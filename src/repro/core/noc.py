@@ -44,6 +44,54 @@ def hops(src: tuple, dst: tuple) -> int:
     return abs(src[0] - dst[0]) + abs(src[1] - dst[1])
 
 
+# Dimension-ordered routing comes in two legal orientations: X-then-Y
+# (the classic default) and its Y-then-X mirror.  Which one a source uses
+# is a free routing parameter — both deliver every destination — and the
+# profile-guided optimizer (repro.routeopt) picks per source whichever
+# spreads measured congestion better.
+ORIENTATIONS = ("xy", "yx")
+
+
+def oriented_route(src: tuple, dst: tuple, orientation: str = "xy"):
+    """``xy_route`` with the trunk dimension as a parameter: "xy" routes
+    X first (the historical fixed choice), "yx" routes Y first.  Returns
+    the same hop-pair list format."""
+    if orientation == "xy":
+        return xy_route(src, dst)
+    if orientation != "yx":
+        raise ValueError(f"unknown orientation {orientation!r}; "
+                         f"expected one of {ORIENTATIONS}")
+    swapped = xy_route((src[1], src[0]), (dst[1], dst[0]))
+    return [((a[1], a[0]), (b[1], b[0])) for a, b in swapped]
+
+
+def build_tree(src: tuple, dsts, orientation: str = "xy"):
+    """Directed edge list of the dimension-ordered multicast tree
+    ``src -> dsts`` — the ONE shared tree builder both the on-chip NoC
+    (``MeshNoc.tree_link_ids`` validates its arithmetic form against it)
+    and the board stitcher (``repro.board.route.chip_tree`` runs it at
+    chip granularity) parameterize by orientation, instead of each
+    hard-coding X-first.
+
+    The union of dimension-ordered routes is a tree (the router
+    duplicates at branch points, never rejoins): shared prefixes are
+    deduplicated, edges keep first-seen order so every edge's tail is
+    already reachable when it appears.
+    """
+    seen: set = set()
+    edges = []
+    s = (int(src[0]), int(src[1]))
+    for d in dsts:
+        d = (int(d[0]), int(d[1]))
+        if d == s:
+            continue
+        for e in oriented_route(s, d, orientation):
+            if e not in seen:
+                seen.add(e)
+                edges.append(e)
+    return edges
+
+
 def multicast_links(src: tuple, dsts) -> int:
     """Number of distinct links traversed by an X/Y multicast tree — the
     router duplicates packets at branch points (Sec. III-B), so shared

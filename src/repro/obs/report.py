@@ -30,13 +30,21 @@ def _metric(row: dict, metric: str) -> Optional[float]:
 
 
 def diff_benches(base: dict, new: dict, metric: str = "us_per_call",
-                 threshold: float = 0.2) -> dict:
+                 threshold: float = 0.2, direction: str = "lower") -> dict:
     """Compare two ``bench_payload`` dicts row by row.
+
+    ``direction`` says which way the metric is good: "lower" (wall
+    times, ``peak_xlink_flits`` — a regression is ratio > 1 +
+    threshold, the historical behavior) or "higher" (throughput,
+    ``improvement`` — a regression is ratio < 1 / (1 + threshold)).
 
     Returns {"rows": [...], "regressions": [...], "missing": [...]} where
     each row entry is (name, base_value, new_value, ratio) and
-    regressions are the subset with ratio > 1 + threshold.
+    regressions are the subset past the threshold in the bad direction.
     """
+    if direction not in ("lower", "higher"):
+        raise ValueError(f"direction must be 'lower' or 'higher', "
+                         f"got {direction!r}")
     base_rows = {r["name"]: r for r in base.get("rows", [])}
     new_rows = {r["name"]: r for r in new.get("rows", [])}
     rows, regressions = [], []
@@ -50,7 +58,9 @@ def diff_benches(base: dict, new: dict, metric: str = "us_per_call",
         ratio = n / b
         entry = {"name": name, "base": b, "new": n, "ratio": ratio}
         rows.append(entry)
-        if ratio > 1.0 + threshold:
+        bad = (ratio > 1.0 + threshold if direction == "lower"
+               else ratio < 1.0 / (1.0 + threshold))
+        if bad:
             regressions.append(entry)
     missing = sorted(set(base_rows) - set(new_rows))
     return {"rows": rows, "regressions": regressions, "missing": missing}
@@ -74,6 +84,10 @@ def main(argv=None) -> int:
     ap.add_argument("--metric", default="us_per_call")
     ap.add_argument("--threshold", type=float, default=0.2,
                     help="relative regression threshold (0.2 = +20%%)")
+    ap.add_argument("--direction", choices=("lower", "higher"),
+                    default="lower",
+                    help="which way the metric is good: 'lower' (times, "
+                         "peak_xlink_flits) or 'higher' (throughput)")
     ap.add_argument("--warn-only", action="store_true",
                     help="report regressions but exit 0 (CI advisory mode)")
     args = ap.parse_args(argv)
@@ -90,7 +104,7 @@ def main(argv=None) -> int:
     _describe("fresh   ", args.fresh, new)
 
     d = diff_benches(base, new, metric=args.metric,
-                     threshold=args.threshold)
+                     threshold=args.threshold, direction=args.direction)
     if not d["rows"]:
         print(f"# no comparable rows for metric {args.metric!r}",
               file=sys.stderr)

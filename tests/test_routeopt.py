@@ -1,0 +1,328 @@
+"""Profile-guided routing (repro.routeopt): deterministic suite.
+
+The invariants the subsystem lives by:
+
+* **0-iteration golden** — ``optimize_routes(max_iters=0)`` IS today's
+  compiler, bit for bit (CSR, coords, records);
+* **routing invariance** — ANY orientation / border-port assignment
+  yields bitwise-identical neuron-state records (packets ride the
+  routing-table masks; incidence only prices links) and an identical
+  delivery signature (flits conserved per (source, destination-set) —
+  ``check_delivery`` also proves every stitched row is a tree);
+* **multi-port spec** — ``ports_per_edge=1`` reproduces the historical
+  mid-edge port and link enumeration exactly; grown boards keep ports
+  distinct and facing;
+* the optimizer never returns a program measured worse than baseline,
+  and its trajectory rows carry the committed-BENCH schema.
+
+This file is the hypothesis-less twin of test_routeopt_property.py.
+"""
+import numpy as np
+import pytest
+
+from repro.board import BoardSpec, compile_board, partition
+from repro.board.spec import BoardNoc, DIRS, OPPOSITE
+from repro.chip.chip import ChipSim
+from repro.chip.compile import compile as compile_graph
+from repro.chip.mesh_noc import MeshNoc, MeshSpec
+from repro.chip.workloads import (hybrid_farm_board_graph, synfire_graph)
+from repro.core.noc import ORIENTATIONS, build_tree, oriented_route, \
+    xy_route
+from repro.obs.report import diff_benches
+from repro.routeopt import (RouteConfig, check_delivery, optimize_routes)
+
+# per-tick record keys that legitimately depend on routing (NoC link
+# accounting); every OTHER key is neuron/workload state and must be
+# bitwise identical under any legal routing
+NOC_KEYS = {"link_load", "link_flits", "e_noc", "e_noc_xchip",
+            "load_xchip", "flits_xchip"}
+
+
+def _is_noc_key(k: str) -> bool:
+    return k in NOC_KEYS or k.startswith("touched_links")
+
+
+def assert_neuron_identical(ra: dict, rb: dict):
+    ka = {k for k in ra if not _is_noc_key(k) and k != "probes"}
+    kb = {k for k in rb if not _is_noc_key(k) and k != "probes"}
+    assert ka == kb
+    for k in ka:
+        assert np.array_equal(np.asarray(ra[k]), np.asarray(rb[k])), k
+
+
+# -------------------------------------------------------------------------
+# Shared tree builder + orientations
+# -------------------------------------------------------------------------
+
+def test_oriented_route_yx_is_y_first():
+    path = oriented_route((0, 0), (2, 3), "yx")
+    assert len(path) == 5                       # manhattan length
+    assert path[0] == ((0, 0), (0, 1))          # first hop moves in Y
+    assert path[-1] == ((1, 3), (2, 3))
+    assert oriented_route((0, 0), (2, 3), "xy") == xy_route((0, 0), (2, 3))
+    with pytest.raises(ValueError):
+        oriented_route((0, 0), (1, 1), "zz")
+
+
+@pytest.mark.parametrize("orientation", ORIENTATIONS)
+def test_tree_link_ids_matches_shared_builder(orientation):
+    noc = MeshNoc(MeshSpec(4, 3))
+    link_of = {l: i for i, l in enumerate(noc.links)}
+    rng = np.random.default_rng(7)
+    for _ in range(25):
+        src = (int(rng.integers(4)), int(rng.integers(3)))
+        dsts = [(int(rng.integers(4)), int(rng.integers(3)))
+                for _ in range(int(rng.integers(0, 7)))]
+        ids = noc.tree_link_ids(src, np.array(dsts).reshape(-1, 2),
+                                orientation=orientation)
+        ref = {link_of[e] for e in build_tree(src, dsts, orientation)}
+        assert set(ids.tolist()) == ref
+        assert noc.tree_links(src, dsts, orientation) == \
+            set(build_tree(src, dsts, orientation))
+
+
+def test_build_tree_is_a_tree():
+    edges = build_tree((1, 1), [(0, 0), (3, 2), (3, 0), (1, 3)], "yx")
+    heads = [b for _, b in edges]
+    assert len(set(edges)) == len(edges)
+    assert len(set(heads)) == len(heads)        # in-degree <= 1
+    assert (1, 1) not in heads                  # never re-enters the root
+
+
+# -------------------------------------------------------------------------
+# Multi-port BoardSpec / BoardNoc
+# -------------------------------------------------------------------------
+
+def test_single_port_board_reproduces_midedge_ports():
+    b = BoardSpec(2, 2, chip=MeshSpec(4, 2))
+    assert b.ports_per_edge == 1
+    assert b.port("E") == (3, 1) and b.port("W") == (0, 1)
+    assert b.port("N") == (2, 1) and b.port("S") == (2, 0)
+    for d in DIRS:
+        assert b.ports(d) == [b.port(d)]
+
+
+def test_multi_port_spread_and_validation():
+    b = BoardSpec(2, 2, chip=MeshSpec(4, 2), ports_per_edge=2)
+    for d in DIRS:
+        ps = b.ports(d)
+        assert len(ps) == 2 and len(set(ps)) == 2
+        # all on the correct border
+        for x, y in ps:
+            assert {"E": x == 3, "W": x == 0,
+                    "N": y == 1, "S": y == 0}[d]
+    with pytest.raises(ValueError):
+        BoardSpec(2, 2, chip=MeshSpec(4, 2), ports_per_edge=3)  # > min(W,H)
+    with pytest.raises(ValueError):
+        BoardSpec(2, 2, chip=MeshSpec(4, 2), ports_per_edge=0)
+
+
+def test_multi_port_noc_enumeration_and_endpoints():
+    chip = MeshSpec(4, 2)
+    n1 = BoardNoc(BoardSpec(2, 2, chip=chip))
+    n2 = BoardNoc(BoardSpec(2, 2, chip=chip, ports_per_edge=2))
+    assert n2.n_xchip_links == 2 * n1.n_xchip_links
+    assert n2.n_onchip_links == n1.n_onchip_links
+    # port-0 links exist under the same (c, d) keys in both
+    for (c, d, j) in n1.xlinks:
+        assert j == 0
+        assert (c, d, 0) in n2.xlink_index and (c, d, 1) in n2.xlink_index
+    # port j bridges to port j on the facing edge
+    for lid in range(n2.n_onchip_links, n2.n_links):
+        (c, a), (nbr, b) = n2.link_endpoints(lid)
+        cc, dd, jj = n2.xlinks[lid - n2.n_onchip_links]
+        assert c == cc and a == n2.board.port(dd, jj)
+        assert b == n2.board.port(OPPOSITE[dd], jj)
+
+
+# -------------------------------------------------------------------------
+# RouteConfig validation
+# -------------------------------------------------------------------------
+
+def test_route_config_validate():
+    b = BoardSpec(2, 2, chip=MeshSpec(4, 2), ports_per_edge=2)
+    RouteConfig(tree_orient={"a": "yx"}, ports={("a", 0, "E"): 1}) \
+        .validate(b)
+    with pytest.raises(ValueError):
+        RouteConfig(tree_orient={"a": "diag"}).validate(b)
+    with pytest.raises(ValueError):
+        RouteConfig(ports={("a", 0, "E"): 2}).validate(b)
+
+
+# -------------------------------------------------------------------------
+# 0-iteration golden: routeopt reproduces today's compile bit-for-bit
+# -------------------------------------------------------------------------
+
+def test_zero_iter_golden_bitwise():
+    board = BoardSpec(2, 2, chip=MeshSpec(4, 2))
+    g = hybrid_farm_board_graph(board)
+    res = optimize_routes(g, board, max_iters=0)
+    base = compile_board(hybrid_farm_board_graph(board), board)
+    pa, pb = res.program, base
+    np.testing.assert_array_equal(pa.coords, pb.coords)
+    np.testing.assert_array_equal(pa.table.masks, pb.table.masks)
+    np.testing.assert_array_equal(pa.sinc.link_ids, pb.sinc.link_ids)
+    np.testing.assert_array_equal(pa.sinc.source_ptr, pb.sinc.source_ptr)
+    np.testing.assert_array_equal(pa.sinc.tree_hops, pb.sinc.tree_hops)
+    np.testing.assert_array_equal(pa.tree_links_x, pb.tree_links_x)
+    np.testing.assert_array_equal(pa.path_hops, pb.path_hops)
+    assert res.trajectory == [] and res.iterations == 0
+    ra, rb = ChipSim(pa).run(16), ChipSim(pb).run(16)
+    assert set(ra) == set(rb)
+    for k in ra:
+        assert np.array_equal(np.asarray(ra[k]), np.asarray(rb[k])), k
+
+
+# -------------------------------------------------------------------------
+# Routing invariance: deterministic parametrized twin of the property
+# suite — any orientation / port assignment leaves neuron records
+# bitwise identical and conserves delivered flits per (src, dst-set)
+# -------------------------------------------------------------------------
+
+def _variants(g, k2_board):
+    pops = [p.name for p in g.populations]
+    yield k2_board, RouteConfig()               # grown board, default route
+    yield k2_board, RouteConfig(
+        tree_orient={p: "yx" for p in pops},
+        chip_orient={p: "yx" for p in pops})
+    ports = {(p, c, d): (i + c) % k2_board.ports_per_edge
+             for i, p in enumerate(pops)
+             for c in range(k2_board.n_chips) for d in DIRS}
+    yield k2_board, RouteConfig(
+        tree_orient={p: ("yx" if i % 2 else "xy")
+                     for i, p in enumerate(pops)},
+        ports=ports)
+
+
+@pytest.mark.parametrize("make", [
+    lambda b: synfire_graph(n_pes=b.n_pes),
+    hybrid_farm_board_graph,
+])
+def test_routing_invariance_deterministic(make):
+    board = BoardSpec(2, 2, chip=MeshSpec(4, 2))
+    base = compile_board(make(board), board)
+    sig0 = check_delivery(base)
+    r0 = ChipSim(base).run(12, seed=5)
+    k2 = BoardSpec(2, 2, chip=MeshSpec(4, 2), ports_per_edge=2)
+    for b, route in _variants(make(board), k2):
+        prog = compile_board(make(b), b, route=route)
+        # flit conservation: tree-walk proves each destination receives
+        # each packet exactly once; equal signatures = equal deliveries
+        assert check_delivery(prog) == sig0
+        assert_neuron_identical(ChipSim(prog).run(12, seed=5), r0)
+        # total flits per (source, dst-set) = packets x flits — flits
+        # per packet is part of the signature, so conservation is exact
+
+
+# -------------------------------------------------------------------------
+# The optimizer itself
+# -------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def opt_2x2():
+    board = BoardSpec(2, 2, chip=MeshSpec(4, 2))
+    g = hybrid_farm_board_graph(board)
+    return optimize_routes(g, board, n_ticks=24, max_iters=3)
+
+
+def test_optimizer_never_worse_and_trajectory_schema(opt_2x2):
+    res = opt_2x2
+    assert res.profile.objective() <= res.baseline.objective()
+    assert res.improvement >= 0.0
+    assert res.iterations >= 1
+    assert res.trajectory[0]["iter"] == 0
+    for row in res.trajectory:
+        for key in ("peak_xlink_flits", "mean_xlink_flits",
+                    "peak_onchip_flits", "compile_s", "measure_s",
+                    "cut_flits"):
+            assert key in row, key
+
+
+def test_optimizer_program_is_legal(opt_2x2):
+    res = opt_2x2
+    board = BoardSpec(2, 2, chip=MeshSpec(4, 2))
+    base = compile_board(hybrid_farm_board_graph(board), board)
+    assert check_delivery(res.program) == check_delivery(base)
+    assert_neuron_identical(ChipSim(res.program).run(12, seed=9),
+                            ChipSim(base).run(12, seed=9))
+
+
+def test_optimizer_budget_zero_skips_iterations():
+    board = BoardSpec(2, 2, chip=MeshSpec(2, 2))
+    g = synfire_graph(n_pes=board.n_pes)
+    res = optimize_routes(g, board, n_ticks=8, max_iters=3, budget_s=0.0)
+    assert res.iterations == 0 and not res.converged
+    assert len(res.trajectory) == 1             # baseline row only
+
+
+# -------------------------------------------------------------------------
+# Partitioner re-weighting by measured rates
+# -------------------------------------------------------------------------
+
+def test_partition_rates_none_unchanged():
+    board = BoardSpec(2, 2, chip=MeshSpec(4, 2))
+    g = hybrid_farm_board_graph(board)
+    pa = partition(g, board)
+    pb = partition(g, board, rates=None)
+    assert pa.chip_of == pb.chip_of and pa.cut_flits == pb.cut_flits
+
+
+def test_partition_rates_reweight_moves_cut():
+    board = BoardSpec(2, 2, chip=MeshSpec(4, 2))
+    g = hybrid_farm_board_graph(board)
+    # silencing every population but one changes the refinement's
+    # weights; the cut metric must follow the given rates
+    rates = {p.name: 0.001 for p in g.populations}
+    hot = g.populations[0].name
+    rates[hot] = 1000.0
+    pa = partition(g, board, rates=rates)
+    assert pa.cut_flits != partition(g, board).cut_flits
+
+
+# -------------------------------------------------------------------------
+# Report --direction (lower/higher regression gates)
+# -------------------------------------------------------------------------
+
+def _payload(**vals):
+    return {"rows": [{"name": "r", "us_per_call": 1.0,
+                      "values": dict(vals)}]}
+
+
+def test_diff_benches_direction_lower():
+    base = _payload(peak_xlink_flits=100.0)
+    worse = _payload(peak_xlink_flits=150.0)
+    better = _payload(peak_xlink_flits=60.0)
+    d = diff_benches(base, worse, metric="peak_xlink_flits",
+                     threshold=0.2, direction="lower")
+    assert len(d["regressions"]) == 1
+    d = diff_benches(base, better, metric="peak_xlink_flits",
+                     threshold=0.2, direction="lower")
+    assert d["regressions"] == []
+
+
+def test_diff_benches_direction_higher():
+    base = _payload(improvement=0.4)
+    worse = _payload(improvement=0.1)
+    better = _payload(improvement=0.5)
+    d = diff_benches(base, worse, metric="improvement",
+                     threshold=0.2, direction="higher")
+    assert len(d["regressions"]) == 1
+    d = diff_benches(base, better, metric="improvement",
+                     threshold=0.2, direction="higher")
+    assert d["regressions"] == []
+    with pytest.raises(ValueError):
+        diff_benches(base, worse, metric="improvement", direction="up")
+
+
+# -------------------------------------------------------------------------
+# Single-chip orientation knob (compile(orientations=...))
+# -------------------------------------------------------------------------
+
+def test_single_chip_orientation_neuron_invariant():
+    g = synfire_graph(16)
+    pa = compile_graph(g)
+    pb = compile_graph(synfire_graph(16),
+                       orientations={p.name: "yx" for p in g.populations})
+    np.testing.assert_array_equal(pa.table.masks, pb.table.masks)
+    assert check_delivery(pa) == check_delivery(pb)
+    assert_neuron_identical(ChipSim(pa).run(30), ChipSim(pb).run(30))

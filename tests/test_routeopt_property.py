@@ -1,0 +1,82 @@
+"""Hypothesis property suite for profile-guided routing: for ARBITRARY
+random graphs, board shapes, orientations and border-port assignments,
+
+* every compiled program's stitched rows are trees that cover every
+  routing-table destination (``check_delivery`` — in-degree <= 1, so
+  each destination receives each packet EXACTLY once);
+* the delivery signature — per source, (destination node set, flits
+  per packet) — is invariant under the routing config, i.e. flits are
+  conserved per (source, destination-set) exactly;
+* on a runnable workload, neuron-state records are bitwise identical
+  under any routing config (packets ride the masks; incidence only
+  prices links).
+
+The deterministic twin for the hypothesis-less CI image lives in
+tests/test_routeopt.py.
+"""
+import numpy as np
+import pytest
+
+from test_sparse_noc import random_graph
+
+pytest.importorskip("hypothesis")
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.board import BoardSpec, compile_board
+from repro.board.spec import DIRS
+from repro.chip.chip import ChipSim
+from repro.chip.mesh_noc import MeshSpec
+from repro.chip.workloads import synfire_graph
+from repro.core.noc import ORIENTATIONS
+from repro.routeopt import RouteConfig, check_delivery
+
+from test_routeopt import assert_neuron_identical
+
+
+def random_route(rng, graph, board) -> RouteConfig:
+    pops = [p.name for p in graph.populations]
+    k = board.ports_per_edge
+    return RouteConfig(
+        tree_orient={p: ORIENTATIONS[rng.integers(2)] for p in pops},
+        chip_orient={p: ORIENTATIONS[rng.integers(2)] for p in pops},
+        ports={(p, c, d): int(rng.integers(k))
+               for p in pops for c in range(board.n_chips) for d in DIRS})
+
+
+def random_multiport_board(rng) -> BoardSpec:
+    chip = MeshSpec(int(rng.integers(2, 5)), int(rng.integers(2, 4)))
+    return BoardSpec(int(rng.integers(1, 4)), int(rng.integers(1, 3)),
+                     chip=chip,
+                     ports_per_edge=int(rng.integers(
+                         1, min(chip.width, chip.height) + 1)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 2**31 - 1))
+def test_delivery_signature_invariant_under_routing(graph_seed, cfg_seed):
+    rng = np.random.default_rng(graph_seed)
+    graph = random_graph(rng)
+    board = random_multiport_board(np.random.default_rng(cfg_seed))
+    try:
+        base = compile_board(graph, board)
+    except ValueError:
+        assume(False)                    # graph does not fit this board
+    route = random_route(np.random.default_rng(cfg_seed), graph, board)
+    prog = compile_board(graph, board, route=route)
+    assert check_delivery(prog) == check_delivery(base)
+    # same multicast reach, possibly different link footprint
+    np.testing.assert_array_equal(prog.table.masks, base.table.masks)
+    np.testing.assert_array_equal(prog.payload_bits, base.payload_bits)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_neuron_records_bitwise_invariant(cfg_seed):
+    board = BoardSpec(2, 2, chip=MeshSpec(2, 2), ports_per_edge=2)
+    graph = synfire_graph(n_pes=board.n_pes)
+    base = compile_board(synfire_graph(n_pes=board.n_pes), board)
+    route = random_route(np.random.default_rng(cfg_seed), graph, board)
+    prog = compile_board(graph, board, route=route)
+    assert check_delivery(prog) == check_delivery(base)
+    assert_neuron_identical(ChipSim(prog).run(10, seed=2),
+                            ChipSim(base).run(10, seed=2))
