@@ -38,7 +38,14 @@ def _dvfs_for(fleet: int) -> QueueDVFS:
 
 def bench_fleet(scenario: str, fleet: int, n_sessions: int, rate: float,
                 round_ticks: int, tick_range: tuple, seed: int = 0,
-                board: str | None = None, chip: str = "2x2") -> dict:
+                board: str | None = None, chip: str = "2x2",
+                obs: bool = False, span_log: str | None = None) -> dict:
+    """One fleet-serve row.  With ``obs`` the engine runs fully
+    instrumented (spans + metrics + SLO monitor): the row name gains an
+    ``_obs`` suffix (so off/on pairs coexist in one artifact and the
+    obs overhead is a row-ratio), the metrics snapshot is merged into
+    the row's ``values``, the span log optionally lands at ``span_log``
+    and a ``critical`` health verdict fails the benchmark."""
     if scenario == "adaptive":
         sc = SCENARIOS[scenario](n_channels=1, n_neurons=64)
     else:
@@ -48,7 +55,7 @@ def bench_fleet(scenario: str, fleet: int, n_sessions: int, rate: float,
         from repro.board import BoardSpec
         bd = BoardSpec.parse(board, chip=chip)
     eng = FleetEngine(sc, round_ticks=round_ticks, dvfs=_dvfs_for(fleet),
-                      board=bd, keep_outputs=False)
+                      board=bd, keep_outputs=False, obs=obs)
     tr = PoissonTraffic(rate=rate, n_sessions=n_sessions,
                         tick_range=tick_range, seed=seed)
     t0 = time.perf_counter()
@@ -60,7 +67,8 @@ def bench_fleet(scenario: str, fleet: int, n_sessions: int, rate: float,
                            "sessions — the stream must drain completely")
 
     where = f"board{board}" if board else "chip"
-    name = f"serve_fleet_{scenario}_{where}_w{fleet}"
+    name = f"serve_fleet_{scenario}_{where}_w{fleet}" + \
+        ("_obs" if obs else "")
     tick_p50_us = st["tick_latency_s"]["p50"] * 1e6
     widths = ",".join(f"{k}:{v}" for k, v in st["width_hist"].items())
     emit(name, tick_p50_us,
@@ -75,20 +83,42 @@ def bench_fleet(scenario: str, fleet: int, n_sessions: int, rate: float,
          f"preemptions={st['preemptions']};rounds={st['rounds']};"
          f"queue_wait_p99_s={st['queue']['wait_p99_s']:.4f};"
          f"widths={widths};wall_s={wall_s:.2f}")
+
+    if obs:
+        o = out["obs"]
+        row = RESULTS[-1]
+        # metrics snapshot joins the row's machine-readable values (the
+        # derived-string keys win on collision — e.g. sessions_per_s is
+        # the whole-serve figure there, the last-round gauge here)
+        for k, v in o["metrics"].items():
+            row["values"].setdefault(k, v)
+        row["values"]["health"] = o["health"]["status"]
+        if span_log:
+            p = o["spans"].write(span_log)
+            print(f"# span log ({len(o['spans'].events)} events) -> {p}")
+        if o["health"]["status"] == "critical":
+            raise RuntimeError(f"fleet health CRITICAL: {o['health']}")
     return st
 
 
 def main(fleet: int = 64, sessions: int = 96, rate: float = 8.0,
          round_ticks: int = 64, min_ticks: int = 128, max_ticks: int = 384,
-         board: str | None = None, budget_s: float | None = None) -> None:
+         board: str | None = None, budget_s: float | None = None,
+         obs: str = "off", span_log: str | None = None) -> None:
     t0 = time.perf_counter()
     tick_range = (min_ticks, max_ticks)
-    bench_fleet("adaptive", fleet, sessions, rate, round_ticks, tick_range)
-    bench_fleet("kws", fleet, sessions, rate, round_ticks, tick_range,
-                seed=1)
-    if board:
-        bench_fleet("adaptive", max(1, fleet // 8), max(4, sessions // 8),
-                    rate, round_ticks, tick_range, seed=2, board=board)
+    for with_obs in {"off": (False,), "on": (True,),
+                     "both": (False, True)}[obs]:
+        # the span-log artifact comes from the first instrumented run
+        slog = span_log if with_obs else None
+        bench_fleet("adaptive", fleet, sessions, rate, round_ticks,
+                    tick_range, obs=with_obs, span_log=slog)
+        bench_fleet("kws", fleet, sessions, rate, round_ticks, tick_range,
+                    seed=1, obs=with_obs)
+        if board:
+            bench_fleet("adaptive", max(1, fleet // 8),
+                        max(4, sessions // 8), rate, round_ticks,
+                        tick_range, seed=2, board=board, obs=with_obs)
     wall = time.perf_counter() - t0
     if budget_s is not None and wall > budget_s:
         raise RuntimeError(f"serve_fleet benchmark took {wall:.1f}s "
@@ -110,6 +140,13 @@ if __name__ == "__main__":
                     help="also run a board-compiled fleet row, e.g. 2x1")
     ap.add_argument("--budget-s", type=float, default=None,
                     help="fail if the whole run exceeds this many seconds")
+    ap.add_argument("--obs", choices=("off", "on", "both"), default="off",
+                    help="serve uninstrumented, instrumented (spans + "
+                         "metrics + SLO gate, rows suffixed _obs), or "
+                         "both back to back (overhead as a row pair)")
+    ap.add_argument("--span-log", default=None, metavar="PATH",
+                    help="write the first instrumented run's span log "
+                         "here (.json / .json.gz)")
     ap.add_argument("--json", default=None, metavar="PATH")
     args = ap.parse_args()
 
@@ -117,7 +154,7 @@ if __name__ == "__main__":
     main(fleet=args.fleet, sessions=args.sessions, rate=args.rate,
          round_ticks=args.round_ticks, min_ticks=args.min_ticks,
          max_ticks=args.max_ticks, board=args.board,
-         budget_s=args.budget_s)
+         budget_s=args.budget_s, obs=args.obs, span_log=args.span_log)
 
     if args.json:
         from repro.obs import write_bench_json

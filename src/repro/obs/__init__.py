@@ -20,21 +20,35 @@ equivalent, in four layers:
   BENCH artifacts and exits nonzero past a regression threshold (the CI
   regression gate).
 """
+from repro.obs.health import (SloMonitor, SloRule, default_fleet_slos,
+                              parse_slo)
 from repro.obs.manifest import (PhaseTimers, bench_payload, config_hash,
                                 run_manifest, write_bench_json)
+from repro.obs.metrics import (Counter, DeviceMetricSpec, Gauge, Histogram,
+                               MetricsRegistry, device_metrics_for,
+                               make_device_metrics)
 from repro.obs.probes import (PROBE_REGISTRY, ProbeSpec, default_probes,
                               link_profile, link_profile_probes,
                               record_link_profile, resolve_probes)
+from repro.obs.spans import (SpanEvent, SpanLog, load_spans,
+                             validate_spans)
 
 __all__ = [
-    "PROBE_REGISTRY", "PhaseTimers", "ProbeSpec", "bench_payload",
-    "config_hash", "default_probes", "diff_benches", "link_profile",
-    "link_profile_probes", "record_link_profile", "resolve_probes",
-    "run_manifest", "trace_events", "write_bench_json", "write_trace",
+    "Counter", "DeviceMetricSpec", "Gauge", "Histogram",
+    "MetricsRegistry", "PROBE_REGISTRY", "PhaseTimers", "ProbeSpec",
+    "SloMonitor", "SloRule", "SpanEvent", "SpanLog", "bench_payload",
+    "config_hash", "default_fleet_slos", "default_probes",
+    "device_metrics_for", "diff_benches", "fleet_trace_events",
+    "link_profile", "link_profile_probes", "load_spans",
+    "make_device_metrics", "parse_slo", "record_link_profile",
+    "resolve_probes", "run_manifest", "trace_events", "validate_spans",
+    "write_bench_json", "write_fleet_trace", "write_trace",
 ]
 
 _LAZY = {"diff_benches": "repro.obs.report",
          "trace_events": "repro.obs.trace",
+         "fleet_trace_events": "repro.obs.trace",
+         "write_fleet_trace": "repro.obs.trace",
          "write_trace": "repro.obs.trace"}
 
 

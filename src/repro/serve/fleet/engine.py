@@ -27,6 +27,7 @@ the exact ``ChipSim.run`` tick, which the tier-1 suite pins bitwise.
 from __future__ import annotations
 
 import time
+from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Optional
 
@@ -38,7 +39,11 @@ from repro.chip.chip import ChipSim
 from repro.chip.compile import compile as compile_graph
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.core.dvfs import QueueDVFS
+from repro.obs.health import SloMonitor, default_fleet_slos
+from repro.obs.metrics import (MetricsRegistry, device_metrics_for,
+                               make_device_metrics)
 from repro.obs.probes import make_batched_probe_step, resolve_probes
+from repro.obs.spans import SpanLog, validate_spans
 from repro.serve.fleet.scenarios import ServedScenario, blank_stim
 from repro.serve.fleet.sessions import Session, SessionTable
 from repro.serve.queue import RequestQueue, percentiles
@@ -53,6 +58,27 @@ def _tree_map(f, *trees):
     return jax.tree_util.tree_map(f, *trees)
 
 
+@dataclass
+class FleetObs:
+    """The serving tier's observability bundle: one span log (request
+    lifecycles + per-round fleet counters), one metrics registry
+    (host-side scheduler/queue numbers + device-side scan accumulators),
+    and one SLO monitor evaluated per scheduling round.  ``FleetEngine``
+    accepts ``obs=FleetObs()`` (or ``obs=True`` for this default
+    configuration); with ``obs=None`` — the default — NO observability
+    code runs and the serve results are bitwise identical to the
+    pre-observability engine."""
+    spans: SpanLog = field(default_factory=SpanLog)
+    metrics: MetricsRegistry = field(default_factory=MetricsRegistry)
+    slos: tuple = field(default_factory=default_fleet_slos)
+    device_metrics: tuple = None          # None = standard fleet set
+    monitor: SloMonitor = None
+
+    def __post_init__(self):
+        if self.monitor is None:
+            self.monitor = SloMonitor(self.slos, spans=self.spans)
+
+
 class FleetEngine:
     """Serve a ``ServedScenario`` with a width-elastic vmapped fleet."""
 
@@ -61,13 +87,15 @@ class FleetEngine:
                  capacity: Optional[int] = None, probes=(),
                  probe_ticks: int = 1024, board=None, refine: bool = True,
                  ckpt_dir=None, seed: int = 1, keep_outputs: bool = True,
-                 max_rounds: int = 100_000, exec_mode: str = "auto"):
+                 max_rounds: int = 100_000, exec_mode: str = "auto",
+                 obs: "FleetObs | bool | None" = None):
         self.scenario = scenario
         self.Tc = int(round_ticks)
         self.dvfs = dvfs or QueueDVFS()
         self.ckpt_dir = None if ckpt_dir is None else Path(ckpt_dir)
         self.keep_outputs = keep_outputs
         self.max_rounds = max_rounds
+        self.obs = FleetObs() if obs is True else (obs or None)
 
         graph = scenario.graph(self.Tc)
         if board is not None:
@@ -112,7 +140,23 @@ class FleetEngine:
 
         self._blank = blank_stim(scenario.ens, self.Tc)
         self._rounds: dict = {}
-        self.queue = RequestQueue()
+        # device-side metric accumulators ride the round scan only when
+        # observability is on; the spec set is filtered against this
+        # program's actual rec keys once, here
+        if self.obs is not None:
+            self._dev_specs = (
+                device_metrics_for(self._rec_sd)
+                if self.obs.device_metrics is None
+                else device_metrics_for(self._rec_sd,
+                                        self.obs.device_metrics))
+            self.obs.spans.meta.setdefault("scenario", scenario.name)
+            self.obs.spans.meta.setdefault("round_ticks", self.Tc)
+            self.obs.spans.meta.setdefault(
+                "levels", [int(l) for l in self.levels])
+        else:
+            self._dev_specs = ()
+        self.queue = RequestQueue(
+            spans=None if self.obs is None else self.obs.spans)
         self.table = SessionTable(self.capacity)
         self._carry = None              # {"st": batched, "obs": batched}
 
@@ -120,7 +164,8 @@ class FleetEngine:
     def _round_fn(self, w: int):
         """The jitted scheduling round at width ``w`` (cached per width):
         scan ``Tc`` ticks of the vmapped engine step, stream out the
-        scenario's output signals and each instance's per-tick joules."""
+        scenario's output signals, each instance's per-tick joules and —
+        when observability is on — the round's device-metric totals."""
         fn = self._rounds.get(w)
         if fn is not None:
             return fn
@@ -131,20 +176,30 @@ class FleetEngine:
                 self.probe_specs, self._rec_sd, self.probe_ticks, w)
         else:
             pstep = None
+        if self._dev_specs:
+            dinit, dstep = make_device_metrics(self._dev_specs, w)
+        else:
+            dinit, dstep = {}, None
 
         def run_round(carry, t0s):
             def body(c, i):
                 ts = t0s + i                       # per-instance local tick
                 st, rec = vtick(c["st"], ts)
                 obs = pstep(c["obs"], rec, ts) if pstep else c["obs"]
+                met = dstep(c["met"], rec) if dstep else c["met"]
                 out = {k: rec[k] for k in out_keys}
                 e = jnp.zeros(t0s.shape[0])
                 for k in e_keys:
                     v = rec[k]
                     e = e + v.sum(axis=tuple(range(1, v.ndim)))
-                return {"st": st, "obs": obs}, (out, e)
-            c, (outs, es) = jax.lax.scan(body, carry, jnp.arange(Tc))
-            return c, outs, es
+                return {"st": st, "obs": obs, "met": met}, (out, e)
+            # the device-metric accumulators reset every round: they ride
+            # the scan-internal carry, never the persistent fleet carry,
+            # so observability on/off cannot change widths or snapshots
+            cc = {"st": carry["st"], "obs": carry["obs"], "met": dinit}
+            cc, (outs, es) = jax.lax.scan(body, cc, jnp.arange(Tc))
+            return ({"st": cc["st"], "obs": cc["obs"]}, outs, es,
+                    cc["met"])
 
         fn = jax.jit(run_round)
         self._rounds[w] = fn
@@ -229,6 +284,10 @@ class FleetEngine:
         while self.table.n_active:
             sess = self.table.evict_tail()
             self._store(sess, self._gather(self.table.n_active))
+            if self.obs is not None:
+                self.obs.spans.emit(
+                    "suspend", sess.sid, ticks_done=sess.ticks_done,
+                    ckpt="disk" if self.ckpt_dir is not None else "memory")
             out.append(sess)
         return out
 
@@ -263,6 +322,7 @@ class FleetEngine:
         with pre-built ``Session`` objects (e.g. checkpointed resumes)
         ahead of generated arrivals."""
         t0 = time.perf_counter()
+        obs = self.obs
         for s in (sessions or []):
             s.arrival_s = time.perf_counter() - t0
             self.queue.submit(s)
@@ -284,6 +344,14 @@ class FleetEngine:
                 sess = self.table.evict_tail()
                 self._store(sess, self._gather(self.table.n_active))
                 sess.preemptions += 1
+                if obs is not None:
+                    obs.spans.emit(
+                        "preempt", sess.sid, round_i=rounds - 1,
+                        slot=self.table.n_active, target=target,
+                        ticks_done=sess.ticks_done,
+                        ckpt="disk" if self.ckpt_dir is not None
+                        else "memory")
+                    obs.metrics.counter("preempted").inc()
                 self.queue.submit(sess, front=True)
             # widen: admit from the queue into compact slots
             while self.table.n_active < target and self.queue:
@@ -294,6 +362,16 @@ class FleetEngine:
                     sess.admitted_s = time.perf_counter() - t0
                 self._scatter(slot, self._load(sess))
                 sess.snapshot = None
+                if obs is not None:
+                    # a session with served ticks is resuming (it was
+                    # preempted here, or restored from another engine's
+                    # checkpoint); a fresh session is admitted
+                    kind = "resume" if sess.ticks_done > 0 else "admit"
+                    obs.spans.emit(kind, sess.sid, round_i=rounds - 1,
+                                   slot=slot, width=target,
+                                   ticks_done=sess.ticks_done)
+                    obs.metrics.counter(
+                        "resumed" if kind == "resume" else "admitted").inc()
 
             n_active = self.table.n_active
             if n_active == 0:
@@ -317,15 +395,22 @@ class FleetEngine:
                               + [0] * (w - n_active), jnp.int32)
 
             wall0 = time.perf_counter()
-            self._carry, outs, es = self._round_fn(w)(self._carry, t0s)
+            self._carry, outs, es, met = self._round_fn(w)(self._carry,
+                                                           t0s)
             es = jax.block_until_ready(es)
-            tick_lat_s.append((time.perf_counter() - wall0) / self.Tc)
+            round_s = time.perf_counter() - wall0
+            tick_lat_s.append(round_s / self.Tc)
 
             es_np = np.asarray(es)                       # (Tc, w)
             outs_np = {k: np.asarray(v) for k, v in outs.items()}
             done_slots = []
             for slot, sess in enumerate(self.table.slots):
                 use = min(sess.remaining, self.Tc)
+                if obs is not None:
+                    obs.spans.emit("round", sess.sid, round_i=rounds - 1,
+                                   slot=slot, width=w,
+                                   t0_ticks=sess.ticks_done, ticks=use,
+                                   start_s=wall0 - t0, dur_s=round_s)
                 sess.ticks_run += self.Tc
                 sess.energy_j += float(es_np[:, slot].sum())
                 if self.keep_outputs:
@@ -354,6 +439,15 @@ class FleetEngine:
                 if moved_from is not None:
                     self._move_slot(slot, moved_from)
                 completed.append(sess)
+                if obs is not None:
+                    obs.spans.emit(
+                        "complete", sess.sid, round_i=rounds - 1,
+                        ticks_done=sess.ticks_done,
+                        energy_j=round(sess.energy_j, 9),
+                        latency_s=round(sess.latency_s(), 6))
+            if obs is not None:
+                self._observe_round(obs, rounds - 1, w, n_active, round_s,
+                                    es_np, met, completed, t0, wall0)
 
         wall = time.perf_counter() - t0
         lat = [s.latency_s() for s in completed]
@@ -375,4 +469,61 @@ class FleetEngine:
             "width_hist": {str(k): v for k, v in sorted(width_hist.items())},
             "queue": self.queue.stats(),
         }
-        return {"sessions": completed, "stats": stats}
+        result = {"sessions": completed, "stats": stats}
+        if obs is not None:
+            dropped = len(self.queue) + self.table.n_active
+            errors = validate_spans(obs.spans.events)
+            stats["health"] = obs.monitor.verdict(dropped=dropped,
+                                                  span_errors=errors)
+            result["obs"] = {"spans": obs.spans,
+                             "metrics": obs.metrics.snapshot(),
+                             "health": stats["health"]}
+        return result
+
+    # ------------------------------------------------- per-round telemetry
+    def _observe_round(self, obs, round_i: int, w: int, n_active: int,
+                       round_s: float, es_np, met, completed, t0,
+                       wall0) -> None:
+        """Fold one scheduling round into the observability bundle:
+        fleet counter sample, host/device metrics, SLO check.  Pure
+        bookkeeping — nothing here feeds back into scheduling."""
+        m = obs.metrics
+        tick_us = round_s / self.Tc * 1e6
+        round_e = float(es_np[:, :n_active].sum())
+        m.counter("rounds").inc()
+        m.counter("ticks_run").inc(n_active * self.Tc)
+        m.counter("energy_j").inc(round_e)
+        m.gauge("width").set(w)
+        m.gauge("n_active").set(n_active)
+        m.gauge("queue_depth").set(len(self.queue))
+        m.histogram("tick_us", scale=1.0).observe(tick_us)
+        for s in self._dev_specs:
+            vals = np.asarray(met[s.name])[:n_active]
+            if s.op == "sum":
+                m.counter(f"dev/{s.name}").inc(float(vals.sum()))
+            elif vals.size:
+                # snapshot suffixes gauges with _peak itself
+                m.gauge(f"dev/{s.name}").set(float(vals.max()))
+        # completion-derived quantities (latency / energy / throughput)
+        elapsed = time.perf_counter() - t0
+        n_done = len(completed)
+        m.gauge("sessions_per_s").set(n_done / elapsed if elapsed else 0.0)
+        admitted = m.counter("admitted").value
+        m.gauge("preempt_rate").set(
+            m.counter("preempted").value / max(1.0, admitted))
+        if n_done:
+            m.gauge("mj_per_request").set(
+                float(np.mean([s.energy_j for s in completed])) * 1e3)
+        lat_hist = m.histogram("req_latency_s", scale=1e-3)
+        done_this_round = [s for s in completed
+                           if s.done_s is not None
+                           and s.done_s >= wall0 - t0]
+        for sess in done_this_round:
+            lat_hist.observe(sess.latency_s())
+        obs.spans.sample(round_i, width=w, n_active=n_active,
+                         queue_depth=len(self.queue),
+                         tick_us=round(tick_us, 3),
+                         round_s=round(round_s, 6),
+                         energy_j=round(round_e, 9),
+                         completed=len(completed))
+        obs.monitor.check(m.snapshot(), round_i=round_i)

@@ -24,11 +24,18 @@ import numpy as np
 
 
 class RequestQueue:
-    """FIFO admission queue shared by the LM and fleet serving engines."""
+    """FIFO admission queue shared by the LM and fleet serving engines.
 
-    def __init__(self, clock=time.perf_counter):
+    ``spans`` optionally attaches a ``repro.obs.spans.SpanLog``: every
+    ``submit`` then opens (or re-opens, for preempted sessions) the
+    item's request-lifecycle span with an ``enqueue`` event — the queue
+    is where a request's observable life begins, so the hook lives here
+    rather than in each engine."""
+
+    def __init__(self, clock=time.perf_counter, spans=None):
         self._q: deque = deque()          # (item, enqueue_time)
         self._clock = clock
+        self.spans = spans
         self.submitted = 0
         self.taken = 0
         self.wait_s: list = []            # queue wait of every taken item
@@ -52,6 +59,12 @@ class RequestQueue:
         else:
             self._q.append(entry)
         self.submitted += 1
+        if self.spans is not None:
+            sid = getattr(item, "sid", None)
+            if sid is not None:
+                self.spans.emit(
+                    "enqueue", sid, front=front, depth=len(self._q),
+                    ticks_done=int(getattr(item, "ticks_done", 0)))
 
     def extend(self, items) -> None:
         for it in items:
@@ -90,8 +103,14 @@ class RequestQueue:
 
 def percentiles(samples, ps=(50, 99)) -> dict:
     """{p50: ..., p99: ...} of ``samples`` (0.0s when empty) — the one
-    latency summary both serving engines report."""
-    a = np.asarray(list(samples), np.float64)
+    latency summary both serving engines report.
+
+    Edge cases are defined, not accidental: an empty input (or one that
+    is all ``None`` — e.g. latencies of sessions that never completed)
+    yields 0.0 for every percentile, and a single sample is its own
+    p50 AND p99 (``np.percentile`` of one point), so downstream
+    ``p99 >= p50`` comparisons hold for any sample count."""
+    a = np.asarray([s for s in samples if s is not None], np.float64)
     return {f"p{p}": (float(np.percentile(a, p)) if a.size else 0.0)
             for p in ps}
 

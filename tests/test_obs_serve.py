@@ -1,0 +1,454 @@
+"""Serving-tier observability (repro.obs.{spans,metrics,health} threaded
+through the fleet engine).
+
+Anchors, strongest first:
+
+* **obs off is bitwise free** — serving with ``obs=None`` (the default)
+  and with full instrumentation produces bitwise-identical per-session
+  outputs: spans/metrics are pure side recorders;
+* **every admitted session yields a well-formed span chain** — the
+  lifecycle grammar (admit precedes ticks, resume only after preempt,
+  exactly one terminal event) validates on live serves, across
+  preemption, and across suspend-to-disk/restore in a fresh engine —
+  standalone AND concatenated;
+* device-side metric accumulators folded inside the jitted round scan
+  equal the numpy reductions of the same records;
+* the SLO monitor turns rule violations + hard invariants (dropped
+  sessions, broken chains) into the serve's health verdict;
+* the Perfetto exporter renders a span log (slices + counter tracks),
+  and the report CLI gates several metrics in one invocation.
+"""
+import gzip
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.dvfs import QueueDVFS
+from repro.obs.health import SloMonitor, SloRule, default_fleet_slos, parse_slo
+from repro.obs.metrics import (Counter, DeviceMetricSpec, Gauge, Histogram,
+                               MetricsRegistry, make_device_metrics)
+from repro.obs.spans import (FLEET_SID, SpanLog, load_spans,
+                             validate_spans)
+from repro.serve.fleet import (FleetEngine, PoissonTraffic, Session,
+                               adaptive_scenario)
+from repro.serve.fleet.engine import FleetObs
+from repro.serve.queue import RequestQueue
+
+TC = 32
+
+
+@pytest.fixture(scope="module")
+def sc():
+    return adaptive_scenario(n_neurons=32)
+
+
+# ------------------------------------------------------------ span grammar
+
+def _chain(*kinds_args):
+    log = SpanLog()
+    for kind, args in kinds_args:
+        log.emit(kind, sid=0, **args)
+    return log.events
+
+
+def test_valid_chain_with_preempt_and_resume():
+    ev = _chain(("enqueue", {}), ("admit", {"slot": 0}),
+                ("round", {"ticks": TC}), ("preempt", {}),
+                ("enqueue", {"front": True}), ("resume", {}),
+                ("round", {"ticks": TC}), ("complete", {}))
+    assert validate_spans(ev, require_complete=True) == []
+
+
+@pytest.mark.parametrize("events,frag", [
+    ([("admit", {})], "admit while new"),
+    ([("enqueue", {}), ("round", {})], "round while queued"),
+    ([("enqueue", {}), ("admit", {}), ("round", {"ticks": 4}),
+      ("preempt", {}), ("enqueue", {}), ("admit", {})],
+     "admit after ticks"),
+    ([("enqueue", {}), ("resume", {})], "resume with no prior"),
+    ([("enqueue", {}), ("admit", {}), ("complete", {}),
+      ("complete", {})], "complete while done"),
+    ([("enqueue", {}), ("admit", {}), ("complete", {}),
+      ("round", {})], "round while done"),
+    ([("enqueue", {}), ("admit", {}), ("enqueue", {})],
+     "enqueue while resident"),
+    ([("enqueue", {}), ("admit", {}), ("preempt", {}), ("preempt", {})],
+     "preempt while preempted"),
+])
+def test_broken_chains_are_flagged(events, frag):
+    problems = validate_spans(_chain(*events))
+    assert problems and frag in problems[0]
+
+
+def test_restored_session_opens_mid_lifecycle():
+    """An enqueue carrying ticks_done > 0 (restore into a fresh engine)
+    is the preempted state: resume is legal, admit is not."""
+    ok = _chain(("enqueue", {"ticks_done": 64}), ("resume", {}),
+                ("round", {"ticks": TC}), ("complete", {}))
+    assert validate_spans(ok, require_complete=True) == []
+    bad = _chain(("enqueue", {"ticks_done": 64}), ("admit", {}))
+    assert "expected resume" in validate_spans(bad)[0]
+
+
+def test_require_complete_flags_unfinished_chains():
+    ev = _chain(("enqueue", {}), ("admit", {}))
+    assert validate_spans(ev) == []
+    problems = validate_spans(ev, require_complete=True)
+    assert len(problems) == 1 and "never completed" in problems[0]
+
+
+def test_fleet_level_events_are_free_form():
+    log = SpanLog()
+    log.emit("slo", rule="tick_us<=5", value=9.0)
+    assert log.events[0].sid == FLEET_SID
+    assert validate_spans(log.events, require_complete=True) == []
+
+
+def test_span_log_roundtrip_gzip(tmp_path):
+    log = SpanLog(meta={"scenario": "t"})
+    log.emit("enqueue", 3, depth=1)
+    log.sample(0, width=4, queue_depth=2)
+    p = log.write(tmp_path / "spans.json", compress=True)
+    assert p.suffix == ".gz"
+    payload = load_spans(p)
+    assert payload["schema"] == "fleet-spans-v1"
+    assert payload["meta"]["scenario"] == "t"
+    assert payload["events"][0]["kind"] == "enqueue"
+    assert payload["counters"][0]["width"] == 4
+    # plain write too, and the loaded dict form validates
+    p2 = log.write(tmp_path / "spans_plain.json")
+    assert validate_spans(load_spans(p2)["events"]) == []
+
+
+def test_unknown_span_kind_rejected():
+    with pytest.raises(ValueError, match="unknown span kind"):
+        SpanLog().emit("frobnicate", 0)
+
+
+def test_queue_emits_enqueue_spans(sc):
+    log = SpanLog()
+    q = RequestQueue(spans=log)
+    q.submit("no-sid-item")                  # plain items stay silent
+    s = Session(sid=5, stream=sc.stream(0), total_ticks=TC)
+    s.ticks_done = 2 * TC
+    q.submit(s, front=True)
+    assert len(log.events) == 1
+    ev = log.events[0]
+    assert ev.kind == "enqueue" and ev.sid == 5
+    assert ev.args["front"] is True and ev.args["ticks_done"] == 2 * TC
+
+
+# ---------------------------------------------------------------- metrics
+
+def test_counter_gauge_basics():
+    c = Counter()
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    g = Gauge()
+    g.set(4)
+    g.set(2)
+    assert g.value == 2 and g.peak == 4
+
+
+def test_histogram_percentiles_log2_buckets():
+    h = Histogram(scale=1e-6, n_buckets=40)
+    assert h.percentile(99) == 0.0 and h.mean == 0.0      # empty
+    h.observe(3e-6)
+    assert h.percentile(50) == h.percentile(99)           # single sample
+    for v in [1e-6, 2e-6, 4e-6, 1e-3, 2e-3]:
+        h.observe(v)
+    # the p99 upper-edge estimate never under-reports: >= exact max is
+    # capped AT the exact max
+    assert h.percentile(99) == h.max == 2e-3
+    assert h.percentile(50) <= h.percentile(99)
+    assert h.count == 6
+
+
+def test_registry_snapshot_and_type_conflicts():
+    m = MetricsRegistry()
+    m.counter("a").inc(2)
+    m.gauge("b").set(7)
+    m.histogram("c").observe(1.0)
+    snap = m.snapshot()
+    assert snap["a"] == 2 and snap["b"] == 7 and snap["b_peak"] == 7
+    assert {"c_p50", "c_p99", "c_mean", "c_max", "c_count"} <= set(snap)
+    with pytest.raises(TypeError):
+        m.gauge("a")
+
+
+def test_device_metric_fold_matches_numpy():
+    """The jit-side accumulators (sum / peak over a round's ticks) equal
+    the numpy reductions of the same per-tick records."""
+    import jax.numpy as jnp
+    specs = (DeviceMetricSpec("spk", "n_spk", "sum"),
+             DeviceMetricSpec("pl", "pl", "peak"))
+    W, T, P = 3, 5, 4
+    rng = np.random.default_rng(0)
+    recs = {"n_spk": rng.integers(0, 9, (T, W, P)).astype(np.float32),
+            "pl": rng.integers(0, 4, (T, W, P)).astype(np.float32)}
+    met, step = make_device_metrics(specs, W)
+    for t in range(T):
+        met = step(met, {k: jnp.asarray(v[t]) for k, v in recs.items()})
+    np.testing.assert_allclose(np.asarray(met["spk"]),
+                               recs["n_spk"].sum(axis=(0, 2)))
+    np.testing.assert_allclose(np.asarray(met["pl"]),
+                               recs["pl"].max(axis=(0, 2)))
+
+
+# ----------------------------------------------------------------- health
+
+def test_parse_slo_specs():
+    r = parse_slo("req_latency_s_p99<=2.5")
+    assert (r.metric, r.op, r.threshold, r.level) == \
+        ("req_latency_s_p99", "<=", 2.5, "warn")
+    r = parse_slo("sessions_per_s>=10:critical")
+    assert r.op == ">=" and r.level == "critical"
+    for bad in ("nope", "m<5", "m<=x", "m<=1:fatal"):
+        with pytest.raises(ValueError):
+            parse_slo(bad)
+
+
+def test_slo_monitor_checks_and_verdict():
+    log = SpanLog()
+    mon = SloMonitor(["tick_us<=5:critical", "sessions_per_s>=1",
+                      SloRule("absent_metric", "<=", 0.0)], spans=log)
+    hits = mon.check({"tick_us": 3.0, "sessions_per_s": 2.0}, round_i=0)
+    assert hits == [] and mon.verdict()["status"] == "ok"
+    hits = mon.check({"tick_us": 9.0, "sessions_per_s": 0.25}, round_i=1)
+    assert len(hits) == 2
+    assert [e.kind for e in log.events] == ["slo", "slo"]
+    v = mon.verdict()
+    assert v["status"] == "critical" and v["violations"] == 2
+    worst = {r["rule"]: r["worst"] for r in v["rules"]}
+    assert worst["tick_us<=5"] == 9.0 and worst["sessions_per_s>=1"] == 0.25
+
+
+def test_verdict_hard_invariants_escalate():
+    mon = SloMonitor(default_fleet_slos())
+    assert mon.verdict()["status"] == "ok"
+    assert mon.verdict(dropped=1)["status"] == "critical"
+    assert mon.verdict(span_errors=["sid 3: broken"])["status"] == \
+        "critical"
+
+
+# ------------------------------------------------- fleet serves, observed
+
+@pytest.fixture(scope="module")
+def observed_serve(sc):
+    """One instrumented serve with narrowing (so preempt/resume spans
+    appear), shared by the assertions below."""
+    eng = FleetEngine(sc, round_ticks=TC,
+                      dvfs=QueueDVFS(thresholds=(3,), batch_levels=(1, 4)),
+                      obs=True)
+    totals = [2 * TC, 5 * TC, 5 * TC]
+    sessions = [Session(sid=i, stream=sc.stream(40 + i), total_ticks=t)
+                for i, t in enumerate(totals)]
+    out = eng.serve(None, sessions=sessions)
+    return eng, out
+
+
+def test_observed_serve_health_and_chains(observed_serve):
+    eng, out = observed_serve
+    assert out["stats"]["completed"] == 3
+    obs = out["obs"]
+    assert obs["health"]["status"] in ("ok", "warn")
+    assert obs["health"]["dropped_sessions"] == 0
+    assert obs["health"]["span_errors"] == []
+    # every admitted session has a complete well-formed chain
+    assert validate_spans(obs["spans"].events, require_complete=True) == []
+    assert sorted(obs["spans"].sids) == [0, 1, 2]
+
+
+def test_observed_serve_records_preemption_spans(observed_serve):
+    eng, out = observed_serve
+    assert out["stats"]["preemptions"] >= 1
+    kinds = [e.kind for e in out["obs"]["spans"].events]
+    assert kinds.count("preempt") == out["stats"]["preemptions"]
+    assert kinds.count("resume") >= 1 and kinds.count("complete") == 3
+    pre = next(e for e in out["obs"]["spans"].events
+               if e.kind == "preempt")
+    assert {"slot", "target", "ticks_done"} <= set(pre.args)
+
+
+def test_observed_serve_metrics_and_counters(observed_serve):
+    eng, out = observed_serve
+    snap = out["obs"]["metrics"]
+    st = out["stats"]
+    assert snap["ticks_run"] == st["ticks_run"]
+    assert snap["admitted"] == 3                 # fresh admissions
+    assert snap["resumed"] == snap["preempted"] == st["preemptions"]
+    assert snap["dev/spikes"] > 0 and snap["dev/pl_peak"] >= 1
+    assert snap["energy_j"] == pytest.approx(
+        sum(s.energy_j for s in out["sessions"]), rel=1e-4)
+    # one fleet counter sample per EXECUTED round, consecutively numbered
+    rounds = [c["round"] for c in out["obs"]["spans"].counters]
+    assert rounds == list(range(len(rounds))) and rounds
+    assert snap["rounds"] == snap["tick_us_count"] == len(rounds)
+    assert snap["rounds"] <= st["rounds"]        # final empty round breaks
+    assert all({"width", "queue_depth", "tick_us", "energy_j"} <= set(c)
+               for c in out["obs"]["spans"].counters)
+
+
+def test_obs_off_is_bitwise_free(sc):
+    """The acceptance anchor: default (obs=None) serving and fully
+    instrumented serving produce bitwise-identical session outputs —
+    the instrumentation never feeds back into the computation."""
+    def run(obs):
+        eng = FleetEngine(sc, round_ticks=TC,
+                          dvfs=QueueDVFS(thresholds=(3,),
+                                         batch_levels=(1, 4)),
+                          obs=obs)
+        sessions = [Session(sid=i, stream=sc.stream(60 + i),
+                            total_ticks=t)
+                    for i, t in enumerate([2 * TC, 4 * TC, 4 * TC])]
+        return eng.serve(None, sessions=sessions)
+
+    plain, instrumented = run(None), run(True)
+    assert "obs" not in plain
+    assert instrumented["obs"]["health"]["span_errors"] == []
+    for a, b in zip(plain["sessions"], instrumented["sessions"]):
+        for k in sc.output_keys:
+            np.testing.assert_array_equal(a.outputs[k], b.outputs[k])
+
+
+def test_span_chain_across_suspend_restore(sc, tmp_path):
+    """Engine 1 serves rounds then suspends to disk; a FRESH engine
+    restores and completes.  Each engine's span log validates standalone
+    and the concatenation validates as one complete chain."""
+    kw = dict(round_ticks=TC, capacity=1, ckpt_dir=tmp_path,
+              dvfs=QueueDVFS(thresholds=(2,), batch_levels=(1, 1)))
+    T, seed = 4 * TC, 17
+
+    eng1 = FleetEngine(sc, max_rounds=2, obs=True, **kw)
+    s1 = Session(sid=9, stream=sc.stream(seed), total_ticks=T)
+    eng1.serve(None, sessions=[s1])
+    eng1.suspend()
+    log1 = eng1.obs.spans.events
+    assert "suspend" in [e.kind for e in log1]
+    assert validate_spans(log1) == []            # standalone: incomplete ok
+    assert validate_spans(log1, require_complete=True) != []
+
+    eng2 = FleetEngine(sc, obs=True, **kw)
+    s2 = eng2.restore_session(9, stream=sc.stream(seed), total_ticks=T)
+    out2 = eng2.serve(None, sessions=[s2])
+    assert out2["sessions"][0].done
+    log2 = eng2.obs.spans.events
+    # the fresh engine's log opens with enqueue(ticks_done>0) -> resume
+    assert validate_spans(log2, require_complete=True) == []
+    sid9 = [e for e in log2 if e.sid == 9]
+    assert sid9[0].kind == "enqueue" and sid9[0].args["ticks_done"] == 2 * TC
+    assert "resume" in [e.kind for e in sid9]
+    # concatenated across engines: one valid complete chain
+    assert validate_spans(list(log1) + list(log2),
+                          require_complete=True) == []
+    assert out2["obs"]["health"]["status"] in ("ok", "warn")
+
+
+def test_custom_slos_gate_the_serve(sc):
+    """An impossible SLO produces warn events in the span log and a warn
+    verdict; a dropped session (max_rounds hit) escalates to critical."""
+    obs = FleetObs(slos=(SloRule("sessions_per_s", ">=", 1e9),))
+    eng = FleetEngine(sc, round_ticks=TC,
+                      dvfs=QueueDVFS(thresholds=(2,), batch_levels=(1, 1)),
+                      capacity=1, obs=obs)
+    out = eng.serve(None, sessions=[Session(sid=0, stream=sc.stream(1),
+                                            total_ticks=TC)])
+    assert out["obs"]["health"]["status"] == "warn"
+    assert any(e.kind == "slo" for e in obs.spans.events)
+
+    obs2 = FleetObs()
+    eng2 = FleetEngine(sc, round_ticks=TC, max_rounds=1,
+                       dvfs=QueueDVFS(thresholds=(2,),
+                                      batch_levels=(1, 1)),
+                       capacity=1, obs=obs2)
+    out2 = eng2.serve(None, sessions=[
+        Session(sid=i, stream=sc.stream(i), total_ticks=2 * TC)
+        for i in range(2)])
+    assert out2["stats"]["completed"] < 2
+    assert out2["obs"]["health"]["status"] == "critical"
+    assert out2["obs"]["health"]["dropped_sessions"] >= 1
+
+
+# ----------------------------------------------------------- trace export
+
+def test_fleet_trace_export_and_cli(observed_serve, tmp_path):
+    from repro.obs.trace import fleet_trace_events, main as trace_main
+    eng, out = observed_serve
+    spans = out["obs"]["spans"]
+    payload = fleet_trace_events(spans.payload())
+    ev = payload["traceEvents"]
+    phases = {e["ph"] for e in ev}
+    assert {"M", "C", "X", "i"} <= phases
+    # counter tracks present for the fleet signals
+    counters = {e["name"].split(" [")[0] for e in ev if e["ph"] == "C"}
+    assert {"queue_depth", "width", "tick_us", "energy_j"} <= counters
+    # per-slot round slices named by the occupying session
+    slices = [e for e in ev if e["ph"] == "X" and e["cat"] == "round"]
+    assert slices and all(e["name"].startswith("sid ") for e in slices)
+    # request lifecycle: resident slices + one terminal instant each
+    completes = [e for e in ev
+                 if e["ph"] == "i" and e["name"] == "complete"]
+    assert len(completes) == 3
+    assert any(e["ph"] == "X" and e.get("cat") == "resident" for e in ev)
+    assert payload["otherData"]["n_requests"] == 3
+
+    # CLI: span log (gz) in, gzipped Perfetto trace out
+    slog = spans.write(tmp_path / "spans.json.gz")
+    out_path = tmp_path / "fleet.perfetto-trace.json"
+    assert trace_main(["--fleet", str(slog), "--gzip",
+                       "--out", str(out_path)]) == 0
+    gz = out_path.with_suffix(".json.gz")
+    assert gz.exists()
+    loaded = json.loads(gzip.decompress(gz.read_bytes()))
+    assert len(loaded["traceEvents"]) == len(ev)
+
+
+# ------------------------------------------------------ report multi-gate
+
+def _payload(tmp_path, fname, rows):
+    from repro.obs import bench_payload
+    p = tmp_path / fname
+    p.write_text(json.dumps(bench_payload(
+        [{"name": n, "us_per_call": u, "derived": d,
+          "values": v} for n, u, d, v in rows])))
+    return str(p)
+
+
+def test_report_multi_metric_single_invocation(tmp_path, capsys):
+    from repro.obs.report import main as report_main
+    base = _payload(tmp_path, "base.json", [
+        ("serve", 100.0, "", {"sessions_per_s": 10.0, "compile_s": 5.0})])
+    # tick time fine, throughput collapsed: only the :higher spec trips
+    fresh = _payload(tmp_path, "fresh.json", [
+        ("serve", 101.0, "", {"sessions_per_s": 4.0, "compile_s": 5.0})])
+    rc = report_main([base, fresh, "--metric", "us_per_call",
+                      "--metric", "sessions_per_s:higher"])
+    assert rc == 1
+    text = capsys.readouterr().out
+    assert "us_per_call: all 1 rows" in text
+    assert "sessions_per_s: 1/1 rows regressed" in text
+    # warn-only downgrades, per-spec threshold loosens to clean
+    assert report_main([base, fresh, "--metric", "us_per_call",
+                        "--metric", "sessions_per_s:higher",
+                        "--warn-only"]) == 0
+    assert report_main([base, fresh,
+                        "--metric", "sessions_per_s:higher:2.0"]) == 0
+
+
+def test_report_multi_metric_missing_rows(tmp_path):
+    from repro.obs.report import main as report_main
+    base = _payload(tmp_path, "b.json", [("x", 1.0, "", {"m": 1.0})])
+    fresh = _payload(tmp_path, "f.json", [("x", 1.0, "", {"m": 1.0})])
+    # one gated metric absent everywhere -> the other still gates (rc 0);
+    # ALL absent -> rc 2
+    from repro.obs.report import parse_metric_spec
+    assert report_main([base, fresh, "--metric", "m",
+                        "--metric", "absent"]) == 0
+    assert report_main([base, fresh, "--metric", "absent"]) == 2
+    assert parse_metric_spec("m:higher:0.5") == ("m", "higher", 0.5)
+    with pytest.raises(ValueError):
+        parse_metric_spec("m:upward")
+    with pytest.raises(ValueError):
+        parse_metric_spec("m:higher:0.5:extra")

@@ -76,6 +76,53 @@ def test_percentiles_empty_and_ordered():
     assert p["p50"] < p["p99"]
 
 
+def test_percentiles_single_sample_and_none():
+    """A single sample is its own p50 AND p99, and None entries
+    (sessions that never completed) are dropped, not propagated."""
+    assert percentiles([7.5]) == {"p50": 7.5, "p99": 7.5}
+    assert percentiles([None, 3.0, None]) == {"p50": 3.0, "p99": 3.0}
+    assert percentiles([None, None]) == {"p50": 0.0, "p99": 0.0}
+    p = percentiles([None, 1.0, 2.0], ps=(0, 50, 100))
+    assert (p["p0"], p["p50"], p["p100"]) == (1.0, 1.5, 2.0)
+
+
+def test_request_queue_stats_before_any_traffic():
+    st = RequestQueue().stats()
+    assert st == {"submitted": 0, "taken": 0, "waiting": 0,
+                  "wait_p50_s": 0.0, "wait_p99_s": 0.0}
+
+
+def test_select_width_at_exact_ladder_boundaries():
+    """The thresholds are inclusive lower edges: offered load EXACTLY at
+    a threshold selects the higher level, one below stays put — and the
+    in-flight term holds the width up after the queue drains (the
+    hysteresis that keeps a busy fleet from collapsing mid-burst)."""
+    dvfs = QueueDVFS(thresholds=(4, 16), batch_levels=(8, 32, 128))
+    q = RequestQueue()
+
+    def width(waiting, in_flight, capacity=None):
+        if len(q):
+            q.take(len(q))
+        q.extend(range(waiting))
+        return select_width(dvfs, q, in_flight=in_flight,
+                            capacity=capacity)
+
+    assert width(3, 0) == 8                  # one below the first edge
+    assert width(4, 0) == 32                 # exactly at it -> climb
+    assert width(15, 0) == 32
+    assert width(16, 0) == 128               # second edge, same rule
+    # the same edges driven purely by in-flight sessions
+    assert width(0, 3) == 8
+    assert width(0, 4) == 32
+    assert width(0, 16) == 128
+    # split across both terms: 2 waiting + 2 resident touches the edge
+    assert width(2, 2) == 32
+    assert width(2, 1) == 8
+    # capacity clamps the ladder, never raises it
+    assert width(16, 0, capacity=12) == 12
+    assert width(3, 0, capacity=12) == 8
+
+
 def test_session_table_compaction():
     t = SessionTable(capacity=4)
     ss = [Session(sid=i, stream=None, total_ticks=1) for i in range(3)]
